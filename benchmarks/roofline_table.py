@@ -1,0 +1,62 @@
+"""§Roofline: render the per-(arch x shape x mesh) table from the dry-run
+sweep (results/dryrun.jsonl) with the three terms, the dominant bottleneck,
+and the MODEL_FLOPS/HLO ratio."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+from typing import Dict, List
+
+
+def load(path="results/dryrun.jsonl") -> List[Dict]:
+    recs = []
+    p = Path(path)
+    if not p.exists():
+        return recs
+    for line in p.read_text().splitlines():
+        try:
+            recs.append(json.loads(line))
+        except json.JSONDecodeError:
+            pass
+    # keep the latest record per cell
+    latest = {}
+    for r in recs:
+        latest[(r["arch"], r["shape"], r["mesh"],
+                r.get("variant", "fsdp_tp"))] = r
+    return list(latest.values())
+
+
+def render(recs: List[Dict]) -> str:
+    lines = []
+    hdr = (f"{'arch':22s} {'shape':12s} {'mesh':6s} {'status':8s} "
+           f"{'compute_s':>10s} {'memory_s':>10s} {'coll_s':>10s} "
+           f"{'dominant':>10s} {'temp_GB':>8s} {'useful':>7s}")
+    lines.append(hdr)
+    lines.append("-" * len(hdr))
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if r["status"] != "ok":
+            lines.append(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} "
+                         f"{r['status']:8s}  ({r.get('reason', r.get('error', ''))[:60]})")
+            continue
+        t = r["roofline"]
+        temp = (r["memory"]["temp_bytes"] or 0) / 1e9
+        useful = r.get("hlo_useful_ratio", 0)
+        lines.append(
+            f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:6s} ok       "
+            f"{t['compute_s']:10.4f} {t['memory_s']:10.4f} "
+            f"{t['collective_s']:10.4f} {t['dominant']:>10s} "
+            f"{temp:8.1f} {useful:7.2f}")
+    return "\n".join(lines)
+
+
+def main(path="results/dryrun.jsonl"):
+    recs = load(path)
+    table = render(recs)
+    print(table)
+    ok = [r for r in recs if r["status"] == "ok"]
+    doms = {}
+    for r in ok:
+        doms[r["roofline"]["dominant"]] = doms.get(
+            r["roofline"]["dominant"], 0) + 1
+    print(f"\ncells ok={len(ok)}  dominant-term histogram: {doms}")
+    return recs

@@ -1,0 +1,71 @@
+"""Benchmark harness: one module per paper table/figure.
+
+  fig7_table4     — Fig. 7 (II vs SoA vs mII) + Table 4 (mapping time)
+  table7_8        — Table 7 (II/U/energy/latency) + Table 8 (vs CPU) +
+                    Fig. 11 (Pareto pruning), executed on the JAX simulator
+  solver_opts     — beyond-paper SAT encoding/symmetry ablations
+  roofline_table  — §Roofline from the multi-pod dry-run sweep
+
+Prints ``name,us_per_call,derived`` CSV per the harness convention and
+writes JSON artifacts under results/.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+
+def _run(name, fn):
+    t0 = time.monotonic()
+    out = fn()
+    dt = (time.monotonic() - t0) * 1e6
+    return name, dt, out
+
+
+def main() -> None:
+    os.makedirs("results", exist_ok=True)
+    rows = []
+
+    import json
+    reuse = os.environ.get("REPRO_BENCH_REUSE") == "1"
+
+    from . import fig7_table4
+    if reuse and os.path.exists("results/fig7_table4.json"):
+        d = json.load(open("results/fig7_table4.json"))
+        name, dt, summary = "fig7_table4(cached)", 0.0, d["summary"]
+    else:
+        name, dt, (_, summary) = _run("fig7_table4", fig7_table4.main)
+    rows.append((name, dt, f"sat_at_mii={summary['sat_at_mii']}/"
+                 f"{summary['cells']};sat_only="
+                 f"{summary['sat_solves_where_heuristic_fails']}"))
+
+    from . import table7_8_runtime
+    if reuse and os.path.exists("results/table7_8.json"):
+        d = json.load(open("results/table7_8.json"))
+        name, dt, bench_rows, pa = "table7_8(cached)", 0.0, d["rows"], d["pareto"]
+    else:
+        name, dt, (bench_rows, pa) = _run("table7_8", table7_8_runtime.main)
+    verified = sum(1 for r in bench_rows if r.get("verified"))
+    rows.append((name, dt,
+                 f"verified={verified};pareto_cover="
+                 f"{pa['runtime_pareto_covered_by_compiler']};"
+                 f"pruning={pa['pruning_factor']}"))
+
+    from . import solver_opts
+    name, dt, srows = _run("solver_opts", solver_opts.main)
+    agree = sum(1 for r in srows if r["same_ii_as_paper_encoding"])
+    rows.append((name, dt, f"ii_agreement={agree}/{len(srows)}"))
+
+    from . import roofline_table
+    name, dt, recs = _run("roofline_table", roofline_table.main)
+    ok = sum(1 for r in recs if r["status"] == "ok")
+    rows.append((name, dt, f"cells_ok={ok}/{len(recs)}"))
+
+    print("\nname,us_per_call,derived")
+    for name, dt, derived in rows:
+        print(f"{name},{dt:.0f},{derived}")
+
+
+if __name__ == '__main__':
+    main()

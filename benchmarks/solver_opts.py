@@ -1,0 +1,78 @@
+"""Beyond-paper solver optimizations: encoding/symmetry ablation.
+
+Measures z3 solve time for the paper's pairwise CNF encoding (baseline)
+vs built-in cardinality (AtMost) vs torus symmetry breaking, and the CDCL
+backend with pairwise vs sequential at-most-one.  Feeds EXPERIMENTS.md §Perf
+(solver lane).
+"""
+from __future__ import annotations
+
+import json
+import time
+from typing import Dict, List
+
+from repro.cgra import make_grid
+from repro.cgra.programs import BENCHMARKS, synthetic_dfg
+from repro.core import MapperConfig, map_dfg
+
+# Note: >30-node CILs are excluded — Python-side encoding construction is
+# not budget-guarded (built fresh per II), so a single variant can take
+# minutes regardless of solver timeouts; a construction-time budget is the
+# recorded follow-up.
+CASES = [
+    ("sha", lambda: BENCHMARKS["sha"]().build_dfg(), (3, 3)),
+    ("sha2", lambda: BENCHMARKS["sha2"]().build_dfg(), (3, 3)),
+    ("stringsearch", lambda: BENCHMARKS["stringsearch"]().build_dfg(), (2, 2)),
+]
+
+VARIANTS = {
+    "paper_pairwise_z3": MapperConfig(backend="z3", amo="pairwise"),
+    "builtin_amo_z3": MapperConfig(backend="z3", amo="builtin"),
+    "symbreak_z3": MapperConfig(backend="z3", amo="pairwise",
+                                symmetry_break=True),
+    "symbreak_builtin_z3": MapperConfig(backend="z3", amo="builtin",
+                                        symmetry_break=True),
+    "cdcl_pairwise": MapperConfig(backend="cdcl", amo="pairwise"),
+    "cdcl_sequential": MapperConfig(backend="cdcl", amo="sequential"),
+}
+
+
+def run(per_ii_timeout: float = 20.0) -> List[Dict]:
+    rows = []
+    for name, make_dfg, size in CASES:
+        dfg = make_dfg()
+        grid = make_grid(*size)
+        base_ii = None
+        for vname, cfg in VARIANTS.items():
+            if vname.startswith("cdcl") and dfg.num_nodes > 12:
+                # pure-Python CDCL: CNF construction (pairwise C2 + Tseitin)
+                # has no budget guard and doesn't scale past ~15-node CILs;
+                # z3 covers the large cases
+                continue
+            import dataclasses
+            cfg = dataclasses.replace(cfg, per_ii_timeout_s=per_ii_timeout,
+                                      ii_max=30,
+                                      total_timeout_s=2 * per_ii_timeout)
+            t0 = time.monotonic()
+            res = map_dfg(dfg, grid, cfg)
+            dt = time.monotonic() - t0
+            if vname == "paper_pairwise_z3":
+                base_ii = res.ii
+            vars_ = res.attempts[-1].num_vars if res.attempts else 0
+            clauses = res.attempts[-1].num_clauses if res.attempts else 0
+            rows.append({
+                "cil": name, "size": f"{size[0]}x{size[1]}",
+                "variant": vname, "ii": res.ii, "time_s": round(dt, 3),
+                "vars": vars_, "clauses": clauses,
+                "same_ii_as_paper_encoding": res.ii == base_ii,
+            })
+            print(f"  solver {name:14s} {vname:22s}: II={res.ii} "
+                  f"{dt:6.2f}s  vars={vars_} clauses={clauses}", flush=True)
+    return rows
+
+
+def main(out="results/solver_opts.json"):
+    rows = run()
+    with open(out, "w") as fh:
+        json.dump(rows, fh, indent=1)
+    return rows

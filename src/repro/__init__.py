@@ -1,0 +1,4 @@
+"""repro: SAT-MapIt (SAT-based exact modulo scheduling for CGRAs) as a
+production JAX framework — solver core, CGRA runtime, LM substrate,
+multi-pod launch."""
+__version__ = "0.1.0"

@@ -1,0 +1,3 @@
+from .arch import CGRASpec, PEGrid, make_grid
+
+__all__ = ["CGRASpec", "PEGrid", "make_grid"]

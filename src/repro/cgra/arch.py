@@ -1,0 +1,99 @@
+"""CGRA architectural model: PE grid, torus topology, register budget.
+
+Matches OpenEdgeCGRA [39]: 2-D array of PEs, nearest-neighbor links wrapping
+around rows and columns (torus), 4-word register file + output register +
+flags per PE, one memory port per column.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, FrozenSet, List, Tuple
+
+
+@dataclass(frozen=True)
+class CGRASpec:
+    rows: int
+    cols: int
+    num_regs: int = 4
+    torus: bool = True
+    name: str = ""
+
+    @property
+    def num_pes(self) -> int:
+        return self.rows * self.cols
+
+    def label(self) -> str:
+        return self.name or f"{self.rows}x{self.cols}"
+
+
+class PEGrid:
+    """Topology queries over a :class:`CGRASpec`.
+
+    PEs are numbered row-major: ``p = r * cols + c``.  The *neighborhood
+    function* (paper Eq. 7): 2 for distinct adjacent PEs, 1 for the same PE,
+    0 otherwise.
+    """
+
+    def __init__(self, spec: CGRASpec):
+        self.spec = spec
+        self._neighbors: List[FrozenSet[int]] = []
+        for p in range(spec.num_pes):
+            self._neighbors.append(frozenset(self._compute_neighbors(p)))
+
+    # -- numbering --------------------------------------------------------------
+
+    @property
+    def num_pes(self) -> int:
+        return self.spec.num_pes
+
+    def coords(self, p: int) -> Tuple[int, int]:
+        return divmod(p, self.spec.cols)
+
+    def pe_at(self, r: int, c: int) -> int:
+        return (r % self.spec.rows) * self.spec.cols + (c % self.spec.cols)
+
+    # -- topology ----------------------------------------------------------------
+
+    def _compute_neighbors(self, p: int) -> List[int]:
+        r, c = self.coords(p)
+        rows, cols = self.spec.rows, self.spec.cols
+        out = set()
+        deltas = [(-1, 0), (1, 0), (0, -1), (0, 1)]
+        for dr, dc in deltas:
+            nr, nc = r + dr, c + dc
+            if self.spec.torus:
+                nr %= rows
+                nc %= cols
+            elif not (0 <= nr < rows and 0 <= nc < cols):
+                continue
+            q = nr * cols + nc
+            if q != p:
+                out.add(q)
+        return sorted(out)
+
+    def neighbors(self, p: int) -> FrozenSet[int]:
+        return self._neighbors[p]
+
+    def f_n(self, p1: int, p2: int) -> int:
+        """Paper Eq. 7 neighborhood function."""
+        if p1 == p2:
+            return 1
+        return 2 if p2 in self._neighbors[p1] else 0
+
+    def reachable_pairs(self) -> List[Tuple[int, int]]:
+        """All (p_s, p_d) with f_n > 0."""
+        out = []
+        for p in range(self.num_pes):
+            out.append((p, p))
+            for q in self._neighbors[p]:
+                out.append((p, q))
+        return out
+
+    def is_vertex_transitive(self) -> bool:
+        """Torus translations act transitively on PEs -> sound PE-symmetry
+        breaking.  Plain (non-torus) meshes are not vertex transitive."""
+        return self.spec.torus
+
+
+def make_grid(rows: int, cols: int, num_regs: int = 4, torus: bool = True) -> PEGrid:
+    return PEGrid(CGRASpec(rows=rows, cols=cols, num_regs=num_regs, torus=torus))

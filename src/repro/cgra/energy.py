@@ -1,0 +1,77 @@
+"""Run-time latency/energy model for mapped CILs (paper §6-7 analogue).
+
+Post-synthesis simulation is not reproducible offline, so run-time metrics
+come from a calibrated model over the assembled instruction grid:
+
+* latency: 1 cycle per CGRA-instruction row, 2 if the row contains a load
+  (OpenEdgeCGRA loads take 2 cycles); +1 per extra concurrent load in the
+  same column (per-column memory port serialization) and +1 per extra
+  concurrent store to the same bank (pipelined stores)  — the paper's §7.2
+  arbitration effects.
+* energy: per-op energy weights (multipliers cost ~4x an add — §7.2 notes
+  the ISA is not optimized for multiplications) + per-PE per-cycle static
+  power.  Constants are calibrated to land in the paper Table 7 nJ range at
+  100 MHz / 65 nm; we use them for *relative* comparisons (Pareto fronts),
+  never as absolute silicon claims.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict, List
+
+from .bitstream import AssembledCIL
+from .isa import LOAD_OPS, MUL_OPS, STORE_OPS
+
+# pJ per executed op
+OP_ENERGY: Dict[str, float] = {}
+_DEFAULT_OP_ENERGY = 1.0
+for _op in MUL_OPS:
+    OP_ENERGY[_op] = 4.0
+for _op in LOAD_OPS + STORE_OPS:
+    OP_ENERGY[_op] = 6.0
+OP_ENERGY["NOP"] = 0.0
+STATIC_PJ_PER_PE_CYCLE = 1.3   # leakage + clock tree + config readout
+
+
+@dataclass
+class RuntimeMetrics:
+    cycles: int
+    energy_nj: float
+    ii: int
+    utilization: float
+
+    @property
+    def latency_us_at_100mhz(self) -> float:
+        return self.cycles / 100.0
+
+
+def row_latency(row, num_cols: int) -> int:
+    """Cycles consumed by one instruction row (arbitration included)."""
+    base = 1
+    loads_per_col: Dict[int, int] = {}
+    stores = 0
+    for pe, ins in enumerate(row):
+        if ins.op in LOAD_OPS:
+            col = pe % num_cols
+            loads_per_col[col] = loads_per_col.get(col, 0) + 1
+            base = 2
+        elif ins.op in STORE_OPS:
+            stores += 1
+    extra = sum(c - 1 for c in loads_per_col.values() if c > 1)
+    extra += max(0, stores - 1)
+    return base + extra
+
+
+def runtime_metrics(asm: AssembledCIL, num_cols: int,
+                    utilization: float) -> RuntimeMetrics:
+    cycles = 0
+    energy = 0.0
+    num_pes = asm.num_pes
+    for row in asm.rows:
+        c = row_latency(row, num_cols)
+        cycles += c
+        energy += c * num_pes * STATIC_PJ_PER_PE_CYCLE
+        for ins in row:
+            energy += OP_ENERGY.get(ins.op, _DEFAULT_OP_ENERGY)
+    return RuntimeMetrics(cycles=cycles, energy_nj=energy / 1000.0,
+                          ii=asm.ii, utilization=utilization)

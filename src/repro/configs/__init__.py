@@ -1,0 +1,44 @@
+"""Architecture registry: ``--arch <id>`` -> config module."""
+from __future__ import annotations
+
+import importlib
+from typing import Callable, Dict, List
+
+from .base import (ModelConfig, MoEConfig, RunConfig, ShapeConfig, SHAPES,
+                   SSMConfig, smoke_of)
+
+ARCH_IDS: List[str] = [
+    "minicpm-2b",
+    "qwen1.5-110b",
+    "llama3.2-3b",
+    "llama3-405b",
+    "paligemma-3b",
+    "jamba-v0.1-52b",
+    "granite-moe-3b-a800m",
+    "kimi-k2-1t-a32b",
+    "whisper-medium",
+    "mamba2-1.3b",
+]
+
+
+def _module_name(arch_id: str) -> str:
+    return arch_id.replace("-", "_").replace(".", "_")
+
+
+def get_config(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f".{_module_name(arch_id)}", __package__)
+    return mod.config()
+
+
+def get_smoke(arch_id: str) -> ModelConfig:
+    mod = importlib.import_module(f".{_module_name(arch_id)}", __package__)
+    return mod.smoke()
+
+
+def registry() -> Dict[str, Callable[[], ModelConfig]]:
+    return {a: (lambda a=a: get_config(a)) for a in ARCH_IDS}
+
+
+__all__ = ["ARCH_IDS", "get_config", "get_smoke", "registry", "ModelConfig",
+           "MoEConfig", "SSMConfig", "RunConfig", "ShapeConfig", "SHAPES",
+           "smoke_of"]

@@ -1,0 +1,221 @@
+"""Config system: model hyper-parameters + run shapes + mesh/sharding knobs.
+
+Every assigned architecture has a module ``repro.configs.<id>`` exporting
+``config()`` (the exact published hyper-parameters) and ``smoke()`` (a
+reduced same-family config for CPU tests).  ``repro.configs.registry()``
+maps ``--arch`` ids to those modules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+# Layer kinds used in block patterns
+ATTN = "attn"
+MAMBA = "mamba"
+
+
+@dataclass(frozen=True)
+class MoEConfig:
+    num_experts: int
+    top_k: int
+    d_ff_expert: int
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+    # layers with index % period == offset are MoE layers (else dense MLP)
+    period: int = 1
+    offset: int = 0
+
+
+@dataclass(frozen=True)
+class SSMConfig:
+    state_size: int = 128
+    conv_kernel: int = 4
+    num_heads: int = 0          # SSD heads; 0 -> derived d_inner // head_dim
+    head_dim: int = 64
+    expand: int = 2
+    chunk: int = 128
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                 # dense | moe | hybrid | ssm | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0           # 0 -> d_model // num_heads
+    qkv_bias: bool = False
+    act: str = "silu"           # silu (SwiGLU) | gelu (GeGLU)
+    rope_theta: float = 500_000.0
+    tie_embeddings: bool = False
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    # hybrid block pattern, one entry per layer index % len(pattern)
+    pattern: Tuple[str, ...] = ()
+    # encoder-decoder (whisper): encoder layer count; frontend is stubbed
+    enc_layers: int = 0
+    enc_seq: int = 1500         # whisper 30 s -> 1500 frames
+    # vlm: number of (precomputed) image patch embeddings
+    num_patches: int = 0
+    # optimizer schedule family the source paper/pool requires
+    schedule: str = "cosine"    # cosine | wsd
+    norm_eps: float = 1e-5
+
+    # -- derived -------------------------------------------------------------
+
+    def resolved_head_dim(self) -> int:
+        return self.head_dim or self.d_model // self.num_heads
+
+    def block_pattern(self) -> Tuple[str, ...]:
+        if self.pattern:
+            return self.pattern
+        if self.family == "ssm":
+            return (MAMBA,)
+        return (ATTN,)
+
+    def layer_kind(self, i: int) -> str:
+        pat = self.block_pattern()
+        return pat[i % len(pat)]
+
+    def is_moe_layer(self, i: int) -> bool:
+        if self.moe is None:
+            return False
+        return i % self.moe.period == self.moe.offset
+
+    def pattern_period(self) -> int:
+        """Length of the repeating layer group (for scan-over-layers)."""
+        p = len(self.block_pattern())
+        if self.moe is not None:
+            import math
+            p = math.lcm(p, self.moe.period)
+        return p
+
+    def num_repeats(self) -> int:
+        period = self.pattern_period()
+        if self.num_layers % period:
+            raise ValueError(
+                f"{self.name}: num_layers {self.num_layers} not divisible by "
+                f"pattern period {period}")
+        return self.num_layers // period
+
+    def param_count(self) -> int:
+        """Analytic parameter count (embeddings included once if tied)."""
+        d, h, kv = self.d_model, self.num_heads, self.num_kv_heads
+        hd = self.resolved_head_dim() if h else 0
+        total = self.vocab_size * d * (1 if self.tie_embeddings else 2)
+        for i in range(self.num_layers):
+            kind = self.layer_kind(i)
+            if kind == ATTN:
+                total += d * (h * hd) + 2 * d * (kv * hd) + (h * hd) * d
+                if self.qkv_bias:
+                    total += h * hd + 2 * kv * hd
+            else:  # mamba
+                s = self.ssm or SSMConfig()
+                d_in = s.expand * d
+                nheads = s.num_heads or d_in // s.head_dim
+                total += d * (2 * d_in + 2 * s.state_size + nheads)
+                total += d_in * s.conv_kernel + d_in * d + 2 * nheads
+            if self.is_moe_layer(i):
+                m = self.moe
+                total += d * m.num_experts          # router
+                total += m.num_experts * 3 * d * m.d_ff_expert
+            else:
+                total += 3 * d * self.d_ff
+            total += 2 * d  # norms
+        if self.enc_layers:
+            total += self.enc_layers * (4 * d * d + 3 * d * self.d_ff + 2 * d)
+            # decoder cross-attention
+            total += self.num_layers * (4 * d * d + d)
+        return total
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: top_k experts only)."""
+        if self.moe is None:
+            return self.param_count()
+        m = self.moe
+        full = self.param_count()
+        moe_layers = sum(1 for i in range(self.num_layers)
+                         if self.is_moe_layer(i))
+        inactive = moe_layers * (m.num_experts - m.top_k) * 3 * self.d_model \
+            * m.d_ff_expert
+        return full - inactive
+
+
+@dataclass(frozen=True)
+class ShapeConfig:
+    """One assigned input-shape cell."""
+
+    name: str                   # train_4k | prefill_32k | decode_32k | long_500k
+    seq_len: int
+    global_batch: int
+    mode: str                   # train | prefill | decode
+
+    @property
+    def tokens(self) -> int:
+        return self.seq_len * self.global_batch
+
+
+SHAPES: Dict[str, ShapeConfig] = {
+    "train_4k": ShapeConfig("train_4k", 4096, 256, "train"),
+    "prefill_32k": ShapeConfig("prefill_32k", 32768, 32, "prefill"),
+    "decode_32k": ShapeConfig("decode_32k", 32768, 128, "decode"),
+    "long_500k": ShapeConfig("long_500k", 524288, 1, "decode"),
+}
+
+
+@dataclass(frozen=True)
+class RunConfig:
+    """Execution knobs: precision, remat, microbatching, sharding variant."""
+
+    remat: str = "full"             # none | dots | full
+    param_dtype: str = "float32"
+    compute_dtype: str = "bfloat16"
+    learning_rate: float = 3e-4
+    weight_decay: float = 0.1
+    warmup_steps: int = 100
+    decay_steps: int = 10_000
+    grad_clip: float = 1.0
+    microbatches: int = 1
+    grad_compression: bool = False   # int8 error-feedback DP all-reduce
+    attn_chunk: int = 1024           # flash-style KV/Q chunking threshold
+    # sharding variant, see repro.parallel.sharding
+    sharding: str = "fsdp_tp"        # dp_tp | fsdp_tp | fsdp_only
+    # analysis mode (roofline dry-run): removes XLA while-loops that hide
+    # compute from cost_analysis (which counts loop bodies once) — full
+    # attention instead of flash, unrolled SSD chunk scan, unfused CE.
+    # Execution semantics are identical; only the schedule differs.
+    analysis_mode: bool = False
+    # fully unroll the layer-stack scans (used by small-depth analysis
+    # compiles so per-layer costs are visible to cost_analysis)
+    scan_unroll: bool = False
+
+
+def smoke_of(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family variant for CPU smoke tests."""
+    period = cfg.pattern_period()
+    changes: Dict = dict(
+        num_layers=2 * period,
+        d_model=64,
+        num_heads=4,
+        num_kv_heads=max(1, min(cfg.num_kv_heads, 2)),
+        d_ff=128,
+        vocab_size=256,
+        head_dim=16,
+        enc_layers=2 if cfg.enc_layers else 0,
+        enc_seq=16 if cfg.enc_layers else cfg.enc_seq,
+        num_patches=8 if cfg.num_patches else 0,
+    )
+    if cfg.moe is not None:
+        changes["moe"] = dataclasses.replace(
+            cfg.moe, num_experts=min(8, cfg.moe.num_experts),
+            top_k=min(2, cfg.moe.top_k), d_ff_expert=32)
+    if cfg.ssm is not None:
+        changes["ssm"] = dataclasses.replace(
+            cfg.ssm, state_size=16, head_dim=16, chunk=8)
+    changes.update(overrides)
+    return dataclasses.replace(cfg, name=cfg.name + "-smoke", **changes)

@@ -1,0 +1,17 @@
+"""granite-moe-3b-a800m [moe]: 32L d=1536 24H (GQA kv=8) expert_ff=512
+vocab=49155, MoE 40 experts top-8 [hf:ibm-granite/granite-3.0-1b-a400m-base; hf].
+"""
+from .base import MoEConfig, ModelConfig, smoke_of
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="granite-moe-3b-a800m", family="moe",
+        num_layers=32, d_model=1536, num_heads=24, num_kv_heads=8,
+        d_ff=512, vocab_size=49155, head_dim=64,
+        rope_theta=10_000.0, tie_embeddings=True,
+        moe=MoEConfig(num_experts=40, top_k=8, d_ff_expert=512))
+
+
+def smoke() -> ModelConfig:
+    return smoke_of(config())

@@ -1,0 +1,27 @@
+"""jamba-v0.1-52b [hybrid]: 32L d=4096 32H (GQA kv=8) d_ff=14336 vocab=65536.
+
+Mamba+attention 1:7 interleave, MoE 16 experts top-2 every other layer
+[arXiv:2403.19887; hf].  Hardware adaptation (DESIGN.md §3): mamba blocks are
+implemented in the Mamba-2 SSD form (matmul-friendly for the MXU); Jamba
+v0.1 ships Mamba-1 kernels — state size kept at 16 as published.
+"""
+from .base import MoEConfig, ModelConfig, SSMConfig, smoke_of
+
+# one attention layer per 8 (index 4), the rest mamba — Jamba block layout
+_PATTERN = ("mamba", "mamba", "mamba", "mamba",
+            "attn", "mamba", "mamba", "mamba")
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="jamba-v0.1-52b", family="hybrid",
+        num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+        d_ff=14336, vocab_size=65536, head_dim=128,
+        pattern=_PATTERN,
+        moe=MoEConfig(num_experts=16, top_k=2, d_ff_expert=14336,
+                      period=2, offset=1),
+        ssm=SSMConfig(state_size=16, conv_kernel=4, head_dim=64, expand=2))
+
+
+def smoke() -> ModelConfig:
+    return smoke_of(config())

@@ -1,0 +1,19 @@
+"""kimi-k2-1t-a32b [moe]: 61L d=7168 64H (GQA kv=8) expert_ff=2048
+vocab=163840, MoE 384 experts top-8 — trillion-param MoE (paper-table)
+[arXiv:2501.kimi2; unverified].
+"""
+from .base import MoEConfig, ModelConfig, smoke_of
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="kimi-k2-1t-a32b", family="moe",
+        num_layers=61, d_model=7168, num_heads=64, num_kv_heads=8,
+        d_ff=2048, vocab_size=163840, head_dim=112,
+        rope_theta=50_000.0,
+        moe=MoEConfig(num_experts=384, top_k=8, d_ff_expert=2048,
+                      capacity_factor=1.25))
+
+
+def smoke() -> ModelConfig:
+    return smoke_of(config())

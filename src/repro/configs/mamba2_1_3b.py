@@ -1,0 +1,17 @@
+"""mamba2-1.3b [ssm]: 48L d=2048 attention-free, vocab=50280, ssm_state=128.
+
+SSD (state-space duality) [arXiv:2405.21060; unverified].
+"""
+from .base import ModelConfig, SSMConfig, smoke_of
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mamba2-1.3b", family="ssm",
+        num_layers=48, d_model=2048, num_heads=0, num_kv_heads=0,
+        d_ff=0, vocab_size=50280, tie_embeddings=True,
+        ssm=SSMConfig(state_size=128, conv_kernel=4, head_dim=64, expand=2))
+
+
+def smoke() -> ModelConfig:
+    return smoke_of(config())

@@ -1,0 +1,17 @@
+"""minicpm-2b [dense]: 40L d=2304 36H (kv=36) d_ff=5760 vocab=122753.
+
+WSD schedule, llama-like decoder [arXiv:2404.06395; hf].
+"""
+from .base import ModelConfig, smoke_of
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="minicpm-2b", family="dense",
+        num_layers=40, d_model=2304, num_heads=36, num_kv_heads=36,
+        d_ff=5760, vocab_size=122753, head_dim=64,
+        rope_theta=10_000.0, tie_embeddings=True, schedule="wsd")
+
+
+def smoke() -> ModelConfig:
+    return smoke_of(config())

@@ -1,0 +1,20 @@
+"""paligemma-3b [vlm]: 18L d=2048 8H (MQA kv=1) d_ff=16384 vocab=257216.
+
+SigLIP vision frontend + gemma decoder [arXiv:2407.07726; hf].  Per the
+assignment spec the modality frontend is a STUB: ``input_specs()`` provides
+256 precomputed patch embeddings that are prepended to the text sequence.
+"""
+from .base import ModelConfig, smoke_of
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="paligemma-3b", family="vlm",
+        num_layers=18, d_model=2048, num_heads=8, num_kv_heads=1,
+        d_ff=16384, vocab_size=257216, head_dim=256,
+        act="gelu", rope_theta=10_000.0, tie_embeddings=True,
+        num_patches=256)
+
+
+def smoke() -> ModelConfig:
+    return smoke_of(config())

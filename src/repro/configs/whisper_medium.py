@@ -1,0 +1,20 @@
+"""whisper-medium [audio]: enc-dec 24L+24L d=1024 16H (kv=16) d_ff=4096
+vocab=51865 [arXiv:2212.04356; unverified].
+
+The conv frontend is a STUB per the assignment spec: ``input_specs()``
+provides 1500 precomputed frame embeddings for the encoder; the transformer
+backbone (encoder + causal decoder with cross-attention) is fully built.
+"""
+from .base import ModelConfig, smoke_of
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-medium", family="encdec",
+        num_layers=24, d_model=1024, num_heads=16, num_kv_heads=16,
+        d_ff=4096, vocab_size=51865, head_dim=64,
+        act="gelu", enc_layers=24, enc_seq=1500)
+
+
+def smoke() -> ModelConfig:
+    return smoke_of(config())

@@ -1,0 +1,19 @@
+"""The paper's primary contribution: SAT-based exact modulo-scheduling mapping."""
+from .dfg import DFG, Edge, Node, running_example
+from .schedule import KMS, MobilitySchedule, Slot, asap_alap, fold_kms
+from .mii import min_ii, rec_ii, res_ii
+from .sat_encoding import KMSEncoding
+from .mapping import Mapping, Placement, validate_mapping
+from .mapper import MapperConfig, MapResult, map_dfg
+from .baseline_ims import HeuristicConfig, map_dfg_heuristic
+from .regalloc import allocate_registers
+
+__all__ = [
+    "DFG", "Edge", "Node", "running_example",
+    "KMS", "MobilitySchedule", "Slot", "asap_alap", "fold_kms",
+    "min_ii", "rec_ii", "res_ii",
+    "KMSEncoding", "Mapping", "Placement", "validate_mapping",
+    "MapperConfig", "MapResult", "map_dfg",
+    "HeuristicConfig", "map_dfg_heuristic",
+    "allocate_registers",
+]

@@ -1,0 +1,169 @@
+"""Solver backends for the KMS encoding: Z3 (as in the paper) and our CDCL.
+
+Both consume the backend-neutral :class:`KMSEncoding` and return
+``(status, model, stats)`` with status in {"sat", "unsat", "unknown"}.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass
+from typing import Dict, Optional, Tuple
+
+from ..sat.cnf import And, CNF, Formula, Not, Or, Tseitin, Var
+from ..sat.cdcl import CDCLSolver, SAT, UNSAT, UNKNOWN
+from .sat_encoding import KMSEncoding
+
+
+@dataclass
+class SolveStats:
+    backend: str
+    time_s: float
+    num_vars: int
+    num_clauses: int
+
+
+# ---------------------------------------------------------------------------
+# Z3 backend
+# ---------------------------------------------------------------------------
+
+
+def _to_z3(f: Formula, z3, bools, cache):
+    cached = cache.get(f)
+    if cached is not None:
+        return cached
+    if isinstance(f, Var):
+        out = bools[f.index]
+    elif isinstance(f, Not):
+        out = z3.Not(_to_z3(f.child, z3, bools, cache))
+    elif isinstance(f, And):
+        out = z3.And(*[_to_z3(c, z3, bools, cache) for c in f.children])
+    elif isinstance(f, Or):
+        out = z3.Or(*[_to_z3(c, z3, bools, cache) for c in f.children])
+    else:
+        raise TypeError(f)
+    cache[f] = out
+    return out
+
+
+def solve_z3(enc: KMSEncoding, timeout_s: Optional[float] = None,
+             amo: str = "pairwise") -> Tuple[str, Optional[Dict[int, bool]], SolveStats]:
+    import z3
+
+    t0 = time.monotonic()
+    solver = z3.Solver()
+    if timeout_s is not None:
+        solver.set("timeout", int(timeout_s * 1000))
+    nv = enc.stats.num_vars
+    bools = [None] + [z3.Bool(f"v{i}") for i in range(1, nv + 1)]
+
+    n_clauses = 0
+    # C1: exactly one per node
+    for lits in enc.node_lits.values():
+        solver.add(z3.Or(*[bools[l] for l in lits]))
+        n_clauses += 1
+        if amo == "builtin":
+            solver.add(z3.AtMost(*[bools[l] for l in lits], 1))
+            n_clauses += 1
+        else:
+            for i in range(len(lits)):
+                for j in range(i + 1, len(lits)):
+                    solver.add(z3.Or(z3.Not(bools[lits[i]]),
+                                     z3.Not(bools[lits[j]])))
+                    n_clauses += 1
+    # C2: at most one node per (PE, row)
+    for lits in enc.pe_row_lits.values():
+        if len(lits) < 2:
+            continue
+        if amo == "builtin":
+            solver.add(z3.AtMost(*[bools[l] for l in lits], 1))
+            n_clauses += 1
+        else:
+            for i in range(len(lits)):
+                for j in range(i + 1, len(lits)):
+                    if enc.meta_of[lits[i]].node == enc.meta_of[lits[j]].node:
+                        continue  # covered by C1
+                    solver.add(z3.Or(z3.Not(bools[lits[i]]),
+                                     z3.Not(bools[lits[j]])))
+                    n_clauses += 1
+    # C3: dependency routing
+    cache: dict = {}
+    for _, f in enc.edge_formulas:
+        solver.add(_to_z3(f, z3, bools, cache))
+        n_clauses += 1
+    # symmetry breaking
+    for lit in enc.forced_false:
+        solver.add(z3.Not(bools[lit]))
+        n_clauses += 1
+    # CEGAR blocking clauses (literals are DIMACS-signed var indices)
+    for clause in enc.blocking_clauses:
+        solver.add(z3.Or(*[z3.Not(bools[-l]) if l < 0 else bools[l]
+                           for l in clause]))
+        n_clauses += 1
+
+    if enc.is_trivially_unsat:
+        stats = SolveStats("z3", time.monotonic() - t0, nv, n_clauses)
+        return UNSAT, None, stats
+
+    res = solver.check()
+    dt = time.monotonic() - t0
+    stats = SolveStats("z3", dt, nv, n_clauses)
+    if res == z3.sat:
+        m = solver.model()
+        model = {i: bool(m.eval(bools[i], model_completion=True))
+                 for i in range(1, nv + 1)}
+        return SAT, model, stats
+    if res == z3.unsat:
+        return UNSAT, None, stats
+    return UNKNOWN, None, stats
+
+
+# ---------------------------------------------------------------------------
+# CDCL backend (self-contained)
+# ---------------------------------------------------------------------------
+
+
+def encoding_to_cnf(enc: KMSEncoding, amo: str = "pairwise") -> CNF:
+    cnf = CNF()
+    cnf.ensure_var(enc.stats.num_vars)
+    for lits in enc.node_lits.values():
+        cnf.exactly_one(lits, encoding="sequential" if amo == "sequential"
+                        else "pairwise")
+    for lits in enc.pe_row_lits.values():
+        if len(lits) < 2:
+            continue
+        if amo == "sequential":
+            cnf.at_most_one_sequential(lits)
+        else:
+            cnf.at_most_one_pairwise(lits)
+    ts = Tseitin(cnf)
+    for _, f in enc.edge_formulas:
+        ts.assert_formula(f)
+    for lit in enc.forced_false:
+        cnf.add_clause((-lit,))
+    for clause in enc.blocking_clauses:
+        cnf.add_clause(tuple(clause))
+    if enc.is_trivially_unsat:
+        v = cnf.new_var()
+        cnf.add_clause((v,))
+        cnf.add_clause((-v,))
+    return cnf
+
+
+def solve_cdcl(enc: KMSEncoding, timeout_s: Optional[float] = None,
+               amo: str = "pairwise") -> Tuple[str, Optional[Dict[int, bool]], SolveStats]:
+    t0 = time.monotonic()
+    cnf = encoding_to_cnf(enc, amo=amo)
+    solver = CDCLSolver(cnf)
+    res = solver.solve(timeout_s=timeout_s)
+    dt = time.monotonic() - t0
+    stats = SolveStats("cdcl", dt, cnf.num_vars, len(cnf.clauses))
+    if res == SAT:
+        model = solver.model()
+        # keep only the original encoding variables
+        model = {i: model.get(i, False)
+                 for i in range(1, enc.stats.num_vars + 1)}
+        return SAT, model, stats
+    return res, None, stats
+
+
+BACKENDS = {"z3": solve_z3, "cdcl": solve_cdcl}

@@ -1,0 +1,143 @@
+"""SAT-MapIt's iterative mapping loop (paper Fig. 4).
+
+``map_dfg`` searches II = mII, mII+1, ... For each II it folds the mobility
+schedule into the KMS, encodes C1/C2/C3, calls the solver, and — on SAT —
+validates register pressure; RA failure bumps II exactly as in the paper.
+``per_ii_timeout_s`` implements the paper's §5.5 *non-exact* mode (bounded
+exploration per II, advancing on timeout).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional
+
+from ..cgra.arch import PEGrid
+from .backends import BACKENDS
+from .dfg import DFG
+from .mapping import Mapping, Placement, classify_handoff, validate_mapping
+from .mii import min_ii
+from .regalloc import allocate_registers
+from .sat_encoding import KMSEncoding
+from .schedule import asap_alap, fold_kms
+
+
+@dataclass
+class MapperConfig:
+    backend: str = "z3"
+    amo: str = "pairwise"          # paper encoding; "builtin"/"sequential" are ours
+    per_ii_timeout_s: Optional[float] = None
+    total_timeout_s: Optional[float] = None
+    ii_max: int = 50               # paper's black-cross cap
+    symmetry_break: bool = False   # beyond-paper optimization
+    on_timeout: str = "advance"    # "advance" (non-exact §5.5) | "fail"
+    validate: bool = True
+    max_cegar_rounds: int = 25     # blocking-clause refinements per II
+
+
+@dataclass
+class IIAttempt:
+    ii: int
+    status: str
+    time_s: float
+    num_vars: int = 0
+    num_clauses: int = 0
+    ra_ok: Optional[bool] = None
+
+
+@dataclass
+class MapResult:
+    mapping: Optional[Mapping]
+    status: str                      # "mapped" | "unsat-capped" | "timeout"
+    mii: int
+    attempts: List[IIAttempt] = field(default_factory=list)
+    total_time_s: float = 0.0
+    validation_errors: List[str] = field(default_factory=list)
+
+    @property
+    def ii(self) -> Optional[int]:
+        return self.mapping.ii if self.mapping else None
+
+
+def _extract_mapping(dfg: DFG, grid: PEGrid, kms, enc: KMSEncoding,
+                     model: Dict[int, bool]) -> Mapping:
+    chosen = enc.decode_model(model)
+    placements = {n: Placement(node=n, pe=m.pe, slot=m.slot)
+                  for n, m in chosen.items()}
+    mapping = Mapping(dfg=dfg, grid=grid, ii=kms.ii, num_folds=kms.num_folds,
+                      placements=placements)
+    for edge in dfg.edges:
+        mapping.handoffs[(edge.src, edge.dst, edge.distance)] = \
+            classify_handoff(mapping, edge)
+    return mapping
+
+
+def map_dfg(dfg: DFG, grid: PEGrid,
+            config: Optional[MapperConfig] = None,
+            ii_start: Optional[int] = None,
+            assemble_check=None) -> MapResult:
+    """``assemble_check(mapping)``: optional CEGAR oracle — returns None if
+    the mapping survives code generation, else a placement-triple list to
+    forbid (e.g. a prologue-clobber counterexample from the bitstream
+    assembler); the same II is re-solved with the combination blocked."""
+    cfg = config or MapperConfig()
+    solve = BACKENDS[cfg.backend]
+    t_start = time.monotonic()
+    ms = asap_alap(dfg)
+    mii = min_ii(dfg, grid.num_pes)
+    ii = max(mii, ii_start or 0)
+    result = MapResult(mapping=None, status="unsat-capped", mii=mii)
+
+    blocked: List = []
+    while ii <= cfg.ii_max:
+        if (cfg.total_timeout_s is not None
+                and time.monotonic() - t_start > cfg.total_timeout_s):
+            result.status = "timeout"
+            break
+        kms = fold_kms(ms, ii)
+        found_or_advance = False
+        for _cegar in range(max(cfg.max_cegar_rounds, 1)):
+            enc = KMSEncoding(dfg, kms, grid,
+                              symmetry_break=cfg.symmetry_break,
+                              blocked_combinations=blocked)
+            budget = cfg.per_ii_timeout_s
+            if cfg.total_timeout_s is not None:
+                remaining = cfg.total_timeout_s - (time.monotonic() - t_start)
+                budget = min(budget, remaining) if budget else remaining
+            status, model, stats = solve(enc, timeout_s=budget, amo=cfg.amo)
+            attempt = IIAttempt(ii=ii, status=status, time_s=stats.time_s,
+                                num_vars=stats.num_vars,
+                                num_clauses=stats.num_clauses)
+            result.attempts.append(attempt)
+            if status == "sat":
+                mapping = _extract_mapping(dfg, grid, kms, enc, model)
+                ra = allocate_registers(mapping)
+                attempt.ra_ok = ra.ok
+                if not ra.ok:
+                    break  # RA failure: paper increments II and re-searches
+                if cfg.validate:
+                    errs = validate_mapping(mapping, kms=kms)
+                    result.validation_errors = errs
+                    if errs:
+                        raise AssertionError(
+                            f"solver returned invalid mapping at II={ii}: "
+                            f"{errs[:3]}")
+                if assemble_check is not None:
+                    counterexample = assemble_check(mapping)
+                    if counterexample:
+                        blocked.append(counterexample)
+                        continue  # re-solve same II with the combo blocked
+                result.mapping = mapping
+                result.status = "mapped"
+                found_or_advance = True
+                break
+            if status == "unknown" and cfg.on_timeout == "fail":
+                result.status = "timeout"
+                found_or_advance = True
+                break
+            break  # unsat / timeout-advance: bump II
+        if found_or_advance:
+            break
+        ii += 1
+    result.total_time_s = time.monotonic() - t_start
+    return result

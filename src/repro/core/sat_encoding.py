@@ -1,0 +1,255 @@
+"""SAT encoding of the KMS mapping problem (paper §4.2).
+
+Literals are ``x_{n,p,c,it}``: node ``n`` placed on PE ``p`` at KMS row ``c``
+with iteration label ``it``.  Three clause families:
+
+* **C1** (Eq. 4): exactly one literal per node.
+* **C2** (Eq. 5): at most one node per (PE, row) — every KMS row executes on
+  every kernel cycle, so exclusivity is per row regardless of label.
+* **C3** (Eq. 8-18): per DFG edge, a disjunction over *candidate placement
+  pairs*; each pair is admissible when
+
+  - the steady-state producer->consumer separation
+    ``s = (d + it_s - it_d) * II + (c_d - c_s)`` satisfies ``1 <= s <= II``
+    (``d`` = loop-carried distance).  ``s ≡ gap (mod II)`` with
+    ``gap = (c_d - c_s + II) % II`` (paper Eq. 10) and ``s <= II`` enforces
+    the paper's "at most one iteration apart" rule; ``s`` must equal the
+    modulo gap exactly because the producer rewrites its output every II
+    cycles.  This uniform rule reproduces Eq. 6 for forward edges and fixes
+    an inconsistency in the printed Eq. 18: the paper's own satisfying
+    assignment (§4.2, e.g. back-edge 11->10 with it_s=0, it_d=1) violates
+    Eq. 18 as printed but satisfies this rule — see tests/test_paper_tables.py.
+  - placement-wise, either ``gap == 1`` and the PEs are neighbors-or-same
+    (γ, Eq. 11: single-cycle output-register hand-off), or ``gap != 1`` and
+    the PEs are identical (ζ1, Eq. 14: register-file hand-off, validated by
+    register allocation), or the PEs are neighbors and **no node executes on
+    the producer PE at any row strictly between** producer and consumer
+    (ζ2, Eq. 16-17: the output register must survive).
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..cgra.arch import PEGrid
+from ..sat.cnf import And, Formula, Not, Or, Var
+from .dfg import DFG, Edge
+from .schedule import KMS, Slot
+
+
+@dataclass(frozen=True)
+class LitMeta:
+    node: int
+    pe: int
+    slot: Slot
+
+
+@dataclass
+class EncodingStats:
+    num_vars: int = 0
+    num_exactly_one_groups: int = 0
+    num_amo_groups: int = 0
+    num_edge_formulas: int = 0
+    num_candidate_pairs: int = 0
+    infeasible_edges: List[Tuple[int, int, int]] = field(default_factory=list)
+
+
+class KMSEncoding:
+    """Builds the literal space and the three constraint families.
+
+    Output is backend-neutral: C1/C2 as literal groups (so each backend can
+    pick its cardinality encoding) and C3 as small formula ASTs.
+    """
+
+    def __init__(self, dfg: DFG, kms: KMS, grid: PEGrid,
+                 symmetry_break: bool = False,
+                 blocked_combinations=()):
+        """``blocked_combinations``: iterable of placement-triple lists
+        [(node, pe, Slot), ...]; each list becomes a clause forbidding that
+        joint placement (CEGAR lazy constraints, e.g. prologue-clobber
+        counterexamples from the bitstream assembler)."""
+        self.dfg = dfg
+        self.kms = kms
+        self.grid = grid
+        self.symmetry_break = symmetry_break and grid.is_vertex_transitive()
+        self.blocked_combinations = list(blocked_combinations)
+
+        self.var_of: Dict[Tuple[int, int, Slot], int] = {}
+        self.meta_of: List[Optional[LitMeta]] = [None]  # 1-indexed
+        self.node_lits: Dict[int, List[int]] = {}
+        self.pe_row_lits: Dict[Tuple[int, int], List[int]] = {}
+        self.stats = EncodingStats()
+
+        self._build_literals()
+        self.edge_formulas: List[Tuple[Edge, Formula]] = []
+        self._build_edges()
+        self.forced_false: List[int] = []
+        self.blocking_clauses: List[List[int]] = []
+        for combo in self.blocked_combinations:
+            clause = []
+            valid = True
+            for (n, p, slot) in combo:
+                var = self.var_of.get((n, p, slot))
+                if var is None:
+                    valid = False
+                    break
+                clause.append(-var)
+            if valid and clause:
+                self.blocking_clauses.append(clause)
+        if self.symmetry_break:
+            self._build_symmetry_breaking()
+        self.stats.num_vars = len(self.meta_of) - 1
+        self.stats.num_exactly_one_groups = len(self.node_lits)
+        self.stats.num_amo_groups = len(self.pe_row_lits)
+        self.stats.num_edge_formulas = len(self.edge_formulas)
+
+    # -- literal space -----------------------------------------------------------
+
+    def _build_literals(self) -> None:
+        for n in self.dfg.node_ids():
+            lits: List[int] = []
+            for slot in self.kms.slots[n]:
+                for p in range(self.grid.num_pes):
+                    idx = len(self.meta_of)
+                    self.meta_of.append(LitMeta(node=n, pe=p, slot=slot))
+                    self.var_of[(n, p, slot)] = idx
+                    lits.append(idx)
+                    self.pe_row_lits.setdefault((p, slot.c), []).append(idx)
+            self.node_lits[n] = lits
+
+    # -- C3 ------------------------------------------------------------------------
+
+    def separation(self, ss: Slot, sd: Slot, distance: int) -> int:
+        return (distance + ss.it - sd.it) * self.kms.ii + (sd.c - ss.c)
+
+    def candidate_pairs(self, edge: Edge) -> List[Tuple[Slot, Slot, int]]:
+        """Admissible (source-slot, dest-slot, gap) triples for an edge."""
+        out: List[Tuple[Slot, Slot, int]] = []
+        ii = self.kms.ii
+        for ss in self.kms.slots[edge.src]:
+            for sd in self.kms.slots[edge.dst]:
+                if edge.src == edge.dst and ss != sd:
+                    continue  # self-dependency: single placement
+                s = self.separation(ss, sd, edge.distance)
+                if not (1 <= s <= ii):
+                    continue
+                gap = (sd.c - ss.c + ii) % ii
+                out.append((ss, sd, gap))
+        return out
+
+    def _blockers(self, p_s: int, c_s: int, eff_gap: int,
+                  skip: Tuple[int, int]) -> List[Formula]:
+        """Literals that would overwrite p_s's output register in the
+        ``eff_gap - 1`` rows strictly between producer and consumer."""
+        ii = self.kms.ii
+        out: List[Formula] = []
+        for k in range(1, eff_gap):
+            row = (c_s + k) % ii
+            for lit in self.pe_row_lits.get((p_s, row), ()):
+                if lit in skip:
+                    continue
+                out.append(Var(lit))
+        return out
+
+    def _edge_formula(self, edge: Edge) -> Optional[Formula]:
+        disjuncts: List[Formula] = []
+        ii = self.kms.ii
+        if edge.kind == "colocate":
+            # same-PE pinning (pipeline-stage colocation): purely spatial —
+            # no timing restriction (dataflow timing comes from data edges)
+            for ss in self.kms.slots[edge.src]:
+                for sd in self.kms.slots[edge.dst]:
+                    for p in range(self.grid.num_pes):
+                        vi = self.var_of[(edge.src, p, ss)]
+                        wj = self.var_of[(edge.dst, p, sd)]
+                        disjuncts.append(And((Var(vi), Var(wj))))
+            return Or(disjuncts)
+        pairs = self.candidate_pairs(edge)
+        self.stats.num_candidate_pairs += len(pairs)
+        if not pairs:
+            self.stats.infeasible_edges.append(
+                (edge.src, edge.dst, edge.distance))
+            return None
+        if edge.kind == "flag":
+            # PE-local flag register: same PE, no other instruction between
+            for (ss, sd, gap) in pairs:
+                eff = gap if gap != 0 else ii
+                for p in range(self.grid.num_pes):
+                    vi = self.var_of[(edge.src, p, ss)]
+                    wj = self.var_of[(edge.dst, p, sd)]
+                    blockers = self._blockers(p, ss.c, eff, (vi, wj))
+                    if blockers:
+                        disjuncts.append(
+                            And((Var(vi), Var(wj), Not(Or(blockers)))))
+                    else:
+                        disjuncts.append(And((Var(vi), Var(wj))))
+            return Or(disjuncts)
+        for (ss, sd, gap) in pairs:
+            if edge.src == edge.dst:
+                # value loops back into the same PE through the register file
+                for p in range(self.grid.num_pes):
+                    disjuncts.append(Var(self.var_of[(edge.src, p, ss)]))
+                continue
+            for (p_s, p_d) in self.grid.reachable_pairs():
+                vi = self.var_of[(edge.src, p_s, ss)]
+                wj = self.var_of[(edge.dst, p_d, sd)]
+                if gap == 1:
+                    # γ (Eq. 11): one-cycle output-register hand-off
+                    disjuncts.append(And((Var(vi), Var(wj))))
+                elif p_s == p_d:
+                    # ζ1 (Eq. 14): same-PE register-file hand-off
+                    disjuncts.append(And((Var(vi), Var(wj))))
+                else:
+                    # ζ2 (Eq. 16): output register held across eff_gap cycles
+                    eff = gap if gap != 0 else ii
+                    blockers = self._blockers(p_s, ss.c, eff, (vi, wj))
+                    if blockers:
+                        disjuncts.append(
+                            And((Var(vi), Var(wj), Not(Or(blockers)))))
+                    else:
+                        disjuncts.append(And((Var(vi), Var(wj))))
+        return Or(disjuncts)
+
+    def _build_edges(self) -> None:
+        for edge in self.dfg.edges:
+            f = self._edge_formula(edge)
+            if f is not None:
+                self.edge_formulas.append((edge, f))
+
+    # -- symmetry breaking (beyond paper) -------------------------------------------
+
+    def _build_symmetry_breaking(self) -> None:
+        """Pin the node with the fewest slots to PE 0.
+
+        Torus translations are CGRA automorphisms, so every mapping can be
+        translated to put this node on PE 0; forbidding its other PEs removes
+        a |PEs|-fold symmetry.  Only sound for vertex-transitive topologies.
+        """
+        pick = min(self.dfg.node_ids(),
+                   key=lambda n: (len(self.kms.slots[n]), n))
+        for slot in self.kms.slots[pick]:
+            for p in range(1, self.grid.num_pes):
+                self.forced_false.append(self.var_of[(pick, p, slot)])
+
+    # -- extraction -------------------------------------------------------------------
+
+    def decode_model(self, model: Dict[int, bool]) -> Dict[int, LitMeta]:
+        """model: var index -> bool. Returns node -> chosen placement."""
+        out: Dict[int, LitMeta] = {}
+        for idx, meta in enumerate(self.meta_of):
+            if meta is None:
+                continue
+            if model.get(idx, False):
+                if meta.node in out:
+                    raise ValueError(
+                        f"node {meta.node} placed twice (C1 violated)")
+                out[meta.node] = meta
+        missing = set(self.dfg.node_ids()) - set(out)
+        if missing:
+            raise ValueError(f"nodes without placement: {sorted(missing)}")
+        return out
+
+    @property
+    def is_trivially_unsat(self) -> bool:
+        return bool(self.stats.infeasible_edges)

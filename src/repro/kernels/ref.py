@@ -1,0 +1,129 @@
+"""Pure-jnp oracle for the CGRA PE-array cycle step.
+
+Semantics contract for the Pallas kernel (pe_array.py): given the decoded
+instruction row and the PE-array state, advance one CGRA-cycle.  All integer
+ALU ops are int32 with wrap-around; flags (sign/zero) are per-PE and updated
+by every executed non-NOP op; BSFA/BZFA select between their operands based
+on the *pre-cycle* flags (i.e. the flags of the previous instruction on that
+PE, as in OpenEdgeCGRA).
+
+Contract: two simultaneous stores to the same address in one cycle are
+undefined behaviour (real hardware serializes them through the column port;
+the mapper never schedules them) — the ref scatter and the Pallas one-hot
+store may disagree only in that case.
+"""
+from __future__ import annotations
+
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..cgra.isa import (FXP_FRAC_BITS, OPCODE, SRC_E, SRC_IMM, SRC_N,
+                        SRC_OWN, SRC_S, SRC_W, SRC_ZERO)
+
+
+class PEState(NamedTuple):
+    regs: jax.Array   # (B, P, 4) int32
+    out: jax.Array    # (B, P) int32
+    sf: jax.Array     # (B, P) int32 (0/1) sign flag
+    zf: jax.Array     # (B, P) int32 (0/1) zero flag
+    mem: jax.Array    # (B, M) int32
+
+
+class InstrRow(NamedTuple):
+    op: jax.Array     # (P,) int32 opcode ids
+    dst: jax.Array    # (P,) int32
+    sa: jax.Array     # (P,) int32 source selectors
+    sb: jax.Array     # (P,) int32
+    imm: jax.Array    # (P,) int32
+
+
+def select_operand(sel, regs, out, out_nbr, imm):
+    """sel: (P,), state tensors batched (B, ...). Returns (B, P) int32."""
+    B, P = out.shape
+    cands = jnp.stack([
+        regs[:, :, 0], regs[:, :, 1], regs[:, :, 2], regs[:, :, 3],
+        out,
+        out_nbr[0], out_nbr[1], out_nbr[2], out_nbr[3],   # N, E, S, W
+        jnp.broadcast_to(imm[None, :], (B, P)),
+        jnp.zeros((B, P), jnp.int32),
+    ], axis=-1)                                            # (B, P, 11)
+    sel_b = jnp.broadcast_to(sel[None, :, None], (B, P, 1))
+    return jnp.take_along_axis(cands, sel_b, axis=-1)[..., 0]
+
+
+def alu(op, a, b, sf, zf):
+    """All-op ALU with select-by-opcode. op: (P,), a/b/sf/zf: (B, P)."""
+    shift = b & 31
+    a64 = a.astype(jnp.int64)
+    b64 = b.astype(jnp.int64)
+    results = {
+        "NOP": jnp.zeros_like(a),
+        "SADD": a + b,
+        "SSUB": a - b,
+        "SMUL": a * b,
+        "FXPMUL": ((a64 * b64) >> FXP_FRAC_BITS).astype(jnp.int32),
+        "SLT": a << shift,
+        "SRT": jax.lax.shift_right_logical(a, shift),
+        "SRA": jax.lax.shift_right_arithmetic(a, shift),
+        "LAND": a & b,
+        "LOR": a | b,
+        "LXOR": a ^ b,
+        "LNAND": ~(a & b),
+        "LNOR": ~(a | b),
+        "LXNOR": ~(a ^ b),
+        "BSFA": jnp.where(sf > 0, a, b),
+        "BZFA": jnp.where(zf > 0, a, b),
+        "LWD": a,            # placeholder: replaced by the memory path
+        "LWI": a,
+        "SWD": b,            # result of a store is the stored value
+        "SWI": b,
+        "BEQ": a - b,
+        "BNE": a - b,
+        "BLT": a - b,
+        "BGE": a - b,
+        "JUMP": jnp.zeros_like(a),
+        "EXIT": jnp.zeros_like(a),
+        "MOV": a + b,
+    }
+    stacked = jnp.stack([results[name] for name in OPCODE], axis=-1)
+    op_b = jnp.broadcast_to(op[None, :, None], a.shape + (1,))
+    return jnp.take_along_axis(stacked, op_b, axis=-1)[..., 0]
+
+
+def cycle_step_ref(state: PEState, instr: InstrRow,
+                   neighbors: Tuple[Tuple[int, int, int, int], ...]) -> PEState:
+    """One CGRA-cycle. ``neighbors[p] = (N, E, S, W)`` is static topology."""
+    regs, out, sf, zf, mem = state
+    B, P = out.shape
+    nbr = np.asarray(neighbors)                            # (P, 4) static
+    out_nbr = [out[:, nbr[:, k]] for k in range(4)]
+    a = select_operand(instr.sa, regs, out, out_nbr, instr.imm)
+    b = select_operand(instr.sb, regs, out, out_nbr, instr.imm)
+
+    res = alu(instr.op, a, b, sf, zf)
+
+    # memory: loads read pre-cycle memory; stores commit at end of cycle
+    is_lwi = instr.op == OPCODE["LWI"]
+    is_load = (instr.op == OPCODE["LWD"]) | is_lwi
+    is_swi = instr.op == OPCODE["SWI"]
+    is_store = (instr.op == OPCODE["SWD"]) | is_swi
+    M = mem.shape[1]
+    addr = a + jnp.where((is_lwi | is_swi)[None, :], instr.imm[None, :], 0)
+    addr_c = jnp.clip(addr, 0, M - 1)
+    loaded = jnp.take_along_axis(mem, addr_c, axis=1)
+    res = jnp.where(is_load[None, :], loaded, res)
+
+    store_addr = jnp.where(is_store[None, :], addr_c, M)   # M = dropped
+    mem = mem.at[jnp.arange(B)[:, None], store_addr].set(b, mode="drop")
+
+    executed = (instr.op != OPCODE["NOP"])[None, :]
+    out = jnp.where(executed, res, out)
+    sf = jnp.where(executed, (res < 0).astype(jnp.int32), sf)
+    zf = jnp.where(executed, (res == 0).astype(jnp.int32), zf)
+    for k in range(4):
+        hit = executed & (instr.dst == k)[None, :]
+        regs = regs.at[:, :, k].set(jnp.where(hit, res, regs[:, :, k]))
+    return PEState(regs=regs, out=out, sf=sf, zf=zf, mem=mem)

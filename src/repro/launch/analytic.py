@@ -1,0 +1,136 @@
+"""Analytic roofline terms per (arch x shape x mesh x sharding variant).
+
+XLA's ``cost_analysis`` counts while-loop bodies once (scan-over-layers,
+flash-attention chunks, SSD chunks, fused-CE chunks), so the compiled-
+artifact numbers under-count total work; small-depth extrapolation recovers
+layer-linear terms but is sensitive to partitioner choices.  This module is
+the closed-form primary source for §Roofline — formulas are exact for the
+matmul-dominated families and stated-assumption approximations elsewhere.
+HLO-derived numbers (raw + extrapolated) are reported alongside in the
+dry-run records for cross-checking.
+
+Assumptions (documented per EXPERIMENTS.md §Roofline):
+* train FLOPs = (3 + remat) * [2*N_active*tokens + attention quadratic term]
+  with remat=1 for full rematerialization (one extra forward);
+* HBM traffic = optimizer/weight streams + activation streams at 20 bytes
+  per token-feature per layer (bf16 read+write across the ~10 major
+  intermediates);
+* collectives follow the fsdp_tp layout: per-step FSDP weight
+  all-gathers (fwd + bwd), gradient reduce-scatter, per-layer KV all-gather
+  (sequence-replicated attention policy, §Perf iter 3), MoE all-to-alls,
+  plus the multi-pod DP all-reduce on the ``pod`` axis.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Dict
+
+from ..configs.base import ATTN, ModelConfig, RunConfig, ShapeConfig
+from .roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+
+@dataclass
+class MeshShape:
+    pod: int
+    data: int
+    model: int
+
+    @property
+    def chips(self) -> int:
+        return self.pod * self.data * self.model
+
+    @property
+    def dp(self) -> int:
+        return self.pod * self.data
+
+
+def _attn_layers(cfg: ModelConfig) -> int:
+    return sum(1 for i in range(cfg.num_layers)
+               if cfg.layer_kind(i) == ATTN)
+
+
+def _moe_layers(cfg: ModelConfig) -> int:
+    return sum(1 for i in range(cfg.num_layers) if cfg.is_moe_layer(i))
+
+
+def analytic_terms(cfg: ModelConfig, shape: ShapeConfig, mesh: MeshShape,
+                   run: RunConfig) -> Dict:
+    N = cfg.active_param_count()
+    N_total = cfg.param_count()
+    B, S = shape.global_batch, shape.seq_len
+    hd = cfg.resolved_head_dim() if cfg.num_heads else 0
+    H = cfg.num_heads
+    kv = cfg.num_kv_heads
+    La = _attn_layers(cfg)
+    Lm = _moe_layers(cfg)
+    d = cfg.d_model
+    chips, dp, tp = mesh.chips, mesh.dp, mesh.model
+
+    if shape.mode == "decode":
+        tokens = B                       # one new token per request
+        ctx = S
+        matmul = 2.0 * N * tokens
+        attn = 4.0 * B * ctx * H * hd * La          # score+PV over the cache
+        flops = matmul + attn
+        # weights stream once (fp32 master in this config), cache touched once
+        cache_bytes = La * 2 * B * S * kv * hd * 2
+        hbm = 4.0 * N_total / chips + cache_bytes / chips \
+            + tokens * d * cfg.num_layers * 20.0 / chips
+        coll = 0.0
+        if run.sharding.startswith("fsdp"):
+            # FSDP weight all-gathers dominate decode — see §Perf iter 4
+            coll += 4.0 * N_total * (dp - 1) / dp / tp
+        coll += La * tokens * kv * hd * 2 * 2 / dp   # kv all-gather
+        if cfg.moe:
+            coll += Lm * 2 * tokens * d * 2 * cfg.moe.top_k / chips
+        mult = 1.0
+    else:
+        tokens = B * S
+        causal = 0.5
+        fwd = 2.0 * N * tokens \
+            + 4.0 * tokens * S * H * hd * La * causal
+        if shape.mode == "train":
+            remat_extra = 1.0 if run.remat == "full" else 0.0
+            flops = (3.0 + remat_extra) * fwd
+        else:
+            flops = fwd
+        tokens_local = tokens / dp
+        act_bytes = tokens_local * d * cfg.num_layers * 20.0
+        if shape.mode == "train":
+            opt_bytes = 32.0 * N_total / chips       # p/m/v/g fp32 streams
+        else:
+            opt_bytes = 4.0 * N_total / chips
+        hbm = opt_bytes + act_bytes
+        coll = 0.0
+        if run.sharding.startswith("fsdp") and shape.mode == "train":
+            coll += 12.0 * N_total * (dp - 1) / dp / tp  # AG fwd+bwd, RS grads
+        elif shape.mode == "train":
+            coll += 4.0 * N_total * (dp - 1) / dp / tp   # grad all-reduce
+        # per-layer kv all-gather + attention-output reshard (policy iter 3)
+        coll += La * tokens_local * (2 * kv * hd + 2 * H * hd) * 2
+        # TP activation all-reduces for the col-sharded MLP path
+        passes = 3 if shape.mode == "train" else 1
+        coll += cfg.num_layers * tokens_local * d * 2 * passes
+        if cfg.moe:
+            coll += Lm * passes * 2 * tokens_local * cfg.moe.top_k * d * 2 / tp
+        mult = 1.0
+
+    flops_per_chip = flops / chips * mult
+    compute_s = flops_per_chip / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = coll / ICI_BW
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", collective_s)), key=lambda kv_: kv_[1])[0]
+    bound = max(compute_s, memory_s, collective_s)
+    model_flops_chip = (6.0 if shape.mode == "train" else 2.0) * N * tokens / chips
+    return {
+        "flops_per_chip": flops_per_chip,
+        "hbm_bytes_per_chip": hbm,
+        "collective_bytes_per_chip": coll,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "roofline_fraction": (model_flops_chip / PEAK_FLOPS) / bound
+        if bound > 0 else 0.0,
+    }

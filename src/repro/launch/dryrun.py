@@ -1,0 +1,283 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512")
+DOC = """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+MUST be the first import side effect: the XLA flag above forces 512 host
+devices before JAX initializes, so ``make_production_mesh`` can build the
+16x16 single-pod and 2x16x16 multi-pod meshes on this CPU-only container.
+Nothing is allocated: all inputs are ShapeDtypeStructs and we stop at
+``.lower().compile()`` + ``memory_analysis()``/``cost_analysis()``.
+
+Usage:
+  PYTHONPATH=src python -m repro.launch.dryrun --arch llama3.2-3b \
+      --shape train_4k --mesh single --out results/dryrun.jsonl
+  PYTHONPATH=src python -m repro.launch.dryrun --all --out results/dryrun.jsonl
+"""
+
+
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+
+from ..configs import ARCH_IDS, get_config
+from ..configs.base import RunConfig, SHAPES
+from ..models.model import Model
+from ..parallel import sharding as shd
+from ..train.train_step import make_train_step
+from .analytic import MeshShape, analytic_terms
+from .input_specs import cell_is_skipped, input_specs
+from .mesh import make_production_mesh
+from .roofline import model_flops, roofline_terms
+
+
+def build_step_and_specs(model: Model, shape, mesh, variant: str):
+    """Returns (fn, kwargs_specs, in_shardings, donate) for this cell."""
+    cfg = model.cfg
+    pspecs = input_specs(model, shape)
+    pshard = shd.param_shardings(model.defs, mesh, variant)
+    bshard = shd.batch_shardings(mesh, cfg, shape)
+
+    if shape.mode == "train":
+        step = make_train_step(model)
+        from ..train.optimizer import OptState
+        opt_shard = OptState(step=shd.replicated(mesh), m=pshard, v=pshard)
+        args = (pspecs["params"], pspecs["opt"], pspecs["batch"])
+        shardings = (pshard, opt_shard, bshard)
+        return step, args, shardings, (0, 1)
+    if shape.mode == "prefill":
+        fn = lambda params, batch: model.forward(params, batch)
+        args = (pspecs["params"], pspecs["batch"])
+        return fn, args, (pshard, bshard), ()
+    # decode
+    sshard = shd.decode_state_shardings(mesh, cfg, shape, pspecs["state"])
+    fn = lambda params, state, tokens: model.decode_step(params, state, tokens)
+    tok_shard = bshard["tokens"]
+    args = (pspecs["params"], pspecs["state"], pspecs["batch"]["tokens"])
+    return fn, args, (pshard, sshard, tok_shard), (1,)
+
+
+def _analysis_cost(cfg, shape, mesh, variant, dec_mult, enc_mult,
+                   run_overrides, mode="analysis"):
+    """Small-depth compile in analysis mode (loops that hide compute from
+    cost_analysis removed); returns (flops, bytes, collective-bytes dict)."""
+    import dataclasses as dc
+    from .roofline import parse_collectives
+    period = cfg.pattern_period()
+    changes = {"num_layers": period * dec_mult}
+    if cfg.enc_layers:
+        changes["enc_layers"] = enc_mult
+    cfg_k = dc.replace(cfg, **changes)
+    overrides = dict(run_overrides or {})
+    if mode == "analysis":
+        # loops hiding compute removed: full attention, unrolled SSD,
+        # unfused CE, unrolled layer scan
+        overrides.update(analysis_mode=True, attn_chunk=1 << 30,
+                         scan_unroll=True)
+    else:
+        # real schedule (flash attention etc.), layer scan unrolled so the
+        # per-layer collectives are all visible
+        overrides.update(scan_unroll=True)
+    model = Model(cfg_k, RunConfig(**overrides))
+    fn, args, shardings, donate = build_step_and_specs(
+        model, shape, mesh, variant)
+    with jax.set_mesh(mesh):
+        lowered = jax.jit(fn, in_shardings=shardings,
+                          donate_argnums=donate).lower(*args)
+        compiled = lowered.compile()
+    cost = compiled.cost_analysis()
+    coll = parse_collectives(compiled.as_text())
+    return (float(cost.get("flops", 0.0)),
+            float(cost.get("bytes accessed", 0.0)),
+            dict(coll.bytes_by_kind))
+
+
+def extrapolated_cost(cfg, shape, mesh, variant, run_overrides):
+    """cost(R_dec, R_enc) ~ base + R_dec*slope_dec + R_enc*slope_enc, from
+    1- and 2-group analysis compiles (fixes while-loop undercounting)."""
+    R = cfg.num_repeats()
+    E = cfg.enc_layers
+    a11 = _analysis_cost(cfg, shape, mesh, variant, 1, 1, run_overrides)
+    a21 = _analysis_cost(cfg, shape, mesh, variant, 2, 1, run_overrides)
+    a12 = _analysis_cost(cfg, shape, mesh, variant, 1, 2, run_overrides) \
+        if E else None
+    c11 = _analysis_cost(cfg, shape, mesh, variant, 1, 1, run_overrides,
+                         mode="real")
+    c21 = _analysis_cost(cfg, shape, mesh, variant, 2, 1, run_overrides,
+                         mode="real")
+    c12 = _analysis_cost(cfg, shape, mesh, variant, 1, 2, run_overrides,
+                         mode="real") if E else None
+
+    def scalar(x11, x21, x12):
+        s_dec = x21 - x11
+        s_enc = (x12 - x11) if x12 is not None else 0.0
+        base = x11 - s_dec - s_enc
+        return max(base + R * s_dec + E * s_enc, 0.0)
+
+    def dicts(d11, d21, d12):
+        keys = set(d11) | set(d21) | (set(d12) if d12 else set())
+        out = {}
+        for k in keys:
+            out[k] = scalar(d11.get(k, 0.0), d21.get(k, 0.0),
+                            d12.get(k, 0.0) if d12 is not None else None)
+        return out
+
+    flops = scalar(a11[0], a21[0], a12[0] if a12 else None)
+    hbm = scalar(a11[1], a21[1], a12[1] if a12 else None)
+    coll = dicts(c11[2], c21[2], c12[2] if c12 else None)
+    return flops, hbm, coll
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             variant: str = "fsdp_tp", run_overrides=None,
+             analyze: bool = True) -> dict:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+           "variant": variant, "status": "ok"}
+    skip = cell_is_skipped(cfg, shape)
+    if skip:
+        rec.update(status="skipped", reason=skip)
+        return rec
+    t0 = time.monotonic()
+    try:
+        run = RunConfig(**(run_overrides or {}))
+        model = Model(cfg, run)
+        mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+        fn, args, shardings, donate = build_step_and_specs(
+            model, shape, mesh, variant)
+        with jax.set_mesh(mesh):
+            jitted = jax.jit(fn, in_shardings=shardings,
+                             donate_argnums=donate)
+            lowered = jitted.lower(*args)
+            t_lower = time.monotonic()
+            compiled = lowered.compile()
+            t_compile = time.monotonic()
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        hlo = compiled.as_text()
+        terms = roofline_terms(cost, hlo)
+        if analyze:
+            try:
+                x_flops, x_bytes, x_coll = extrapolated_cost(
+                    cfg, shape, mesh, variant, run_overrides)
+                from .roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+                xc = sum(x_coll.values())
+                terms.flops = x_flops
+                terms.hbm_bytes = x_bytes
+                terms.collective_bytes = xc
+                terms.compute_s = x_flops / PEAK_FLOPS
+                terms.memory_s = x_bytes / HBM_BW
+                terms.collective_s = xc / ICI_BW
+                terms.collectives = {k: int(v) for k, v in x_coll.items()}
+                terms.dominant = max(
+                    (("compute", terms.compute_s), ("memory", terms.memory_s),
+                     ("collective", terms.collective_s)),
+                    key=lambda kv: kv[1])[0]
+            except Exception as e:  # noqa: BLE001 — keep raw-cost record
+                rec["analysis_error"] = f"{type(e).__name__}: {e}"
+        chips = mesh.devices.size
+        mflops = model_flops(cfg.param_count(), cfg.active_param_count(),
+                             shape.tokens if shape.mode != "decode"
+                             else shape.global_batch, shape.mode)
+        ms = MeshShape(pod=2 if mesh_kind == "multi" else 1, data=16,
+                       model=16)
+        ana = analytic_terms(cfg, shape, ms, run)
+        rec.update(
+            analytic=ana,
+            lower_s=round(t_lower - t0, 2),
+            compile_s=round(t_compile - t_lower, 2),
+            chips=chips,
+            memory={
+                "argument_bytes": getattr(mem, "argument_size_in_bytes", None),
+                "output_bytes": getattr(mem, "output_size_in_bytes", None),
+                "temp_bytes": getattr(mem, "temp_size_in_bytes", None),
+                "code_bytes": getattr(mem, "generated_code_size_in_bytes",
+                                      None),
+            },
+            roofline=terms.as_dict(),
+            model_flops_total=mflops,
+            model_flops_per_chip=mflops / chips,
+            hlo_useful_ratio=(mflops / chips) / max(terms.flops, 1.0),
+        )
+    except Exception as e:  # noqa: BLE001 — record and continue the sweep
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-2000:])
+    rec["total_s"] = round(time.monotonic() - t0, 2)
+    return rec
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=ARCH_IDS)
+    p.add_argument("--shape", choices=list(SHAPES))
+    p.add_argument("--mesh", choices=["single", "multi"], default="single")
+    p.add_argument("--variant", default="fsdp_tp")
+    p.add_argument("--all", action="store_true")
+    p.add_argument("--out", default="results/dryrun.jsonl")
+    p.add_argument("--skip-done", action="store_true",
+                   help="skip cells already present in --out")
+    p.add_argument("--no-analyze", action="store_true",
+                   help="skip the small-depth analysis compiles")
+    p.add_argument("--remat", default=None)
+    p.add_argument("--microbatches", type=int, default=None)
+    p.add_argument("--attn-chunk", type=int, default=None)
+    p.add_argument("--sharding-variant", dest="variant2", default=None)
+    args = p.parse_args()
+
+    out = Path(args.out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    done = set()
+    if args.skip_done and out.exists():
+        for line in out.read_text().splitlines():
+            try:
+                r = json.loads(line)
+                if r.get("status") in ("ok", "skipped"):
+                    done.add((r["arch"], r["shape"], r["mesh"],
+                              r.get("variant", "fsdp_tp")))
+            except json.JSONDecodeError:
+                pass
+
+    cells = []
+    if args.all:
+        for arch in ARCH_IDS:
+            for shape in SHAPES:
+                for mesh in ("single", "multi"):
+                    cells.append((arch, shape, mesh))
+    else:
+        cells.append((args.arch, args.shape, args.mesh))
+
+    overrides = {}
+    if args.remat is not None:
+        overrides["remat"] = args.remat
+    if args.microbatches is not None:
+        overrides["microbatches"] = args.microbatches
+    if args.attn_chunk is not None:
+        overrides["attn_chunk"] = args.attn_chunk
+    for (arch, shape, mesh) in cells:
+        key = (arch, shape, mesh, args.variant)
+        if key in done:
+            continue
+        rec = run_cell(arch, shape, mesh, args.variant,
+                       run_overrides=overrides or None,
+                       analyze=not args.no_analyze)
+        with out.open("a") as fh:
+            fh.write(json.dumps(rec) + "\n")
+        status = rec["status"]
+        extra = ""
+        if status == "ok":
+            r = rec["roofline"]
+            extra = (f" dom={r['dominant']} comp={r['compute_s']:.4f}s "
+                     f"mem={r['memory_s']:.4f}s coll={r['collective_s']:.4f}s"
+                     f" compile={rec['compile_s']}s")
+        elif status == "error":
+            extra = " " + rec["error"][:120]
+        print(f"[{status}] {arch} x {shape} x {mesh}{extra}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,61 @@
+"""ShapeDtypeStruct stand-ins for every (architecture x shape) cell.
+
+No device allocation anywhere — this is what the multi-pod dry-run lowers
+against.  ``decode_*``/``long_*`` shapes describe one serve step (one new
+token against a seq_len-deep KV cache); ``train_*`` a full train step;
+``prefill_*`` the batched prefill forward.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, RunConfig, SHAPES, ShapeConfig
+from ..models.model import Model, decode_state_spec
+from ..train.optimizer import opt_state_specs
+
+# Cells skipped by policy (documented in DESIGN.md §5):
+#  - long_500k needs sub-quadratic attention -> only ssm/hybrid run it.
+LONG_CONTEXT_FAMILIES = ("ssm", "hybrid")
+
+
+def cell_is_skipped(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    if shape.name == "long_500k" and cfg.family not in LONG_CONTEXT_FAMILIES:
+        return ("full-attention architecture: O(L^2) attention at 524k "
+                "context is excluded by the shape spec (sub-quadratic only)")
+    return None
+
+
+def batch_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    B, S = shape.global_batch, shape.seq_len
+    if shape.mode == "decode":
+        specs = {"tokens": jax.ShapeDtypeStruct((B, 1), jnp.int32)}
+        return specs
+    specs = {"tokens": jax.ShapeDtypeStruct((B, S), jnp.int32)}
+    if shape.mode == "train":
+        specs["labels"] = jax.ShapeDtypeStruct((B, S), jnp.int32)
+        specs["loss_mask"] = jax.ShapeDtypeStruct((B, S), jnp.float32)
+    if cfg.family == "vlm":
+        specs["patch_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.num_patches, cfg.d_model), jnp.float32)
+    if cfg.enc_layers:
+        specs["frame_embeds"] = jax.ShapeDtypeStruct(
+            (B, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return specs
+
+
+def input_specs(model: Model, shape: ShapeConfig) -> Dict[str, Any]:
+    """All abstract inputs for the step function of this cell."""
+    cfg = model.cfg
+    out: Dict[str, Any] = {
+        "params": model.param_specs(),
+        "batch": batch_specs(cfg, shape),
+    }
+    if shape.mode == "train":
+        out["opt"] = opt_state_specs(out["params"])
+    if shape.mode == "decode":
+        state = decode_state_spec(cfg, shape.global_batch, shape.seq_len)
+        out["state"] = state
+    return out

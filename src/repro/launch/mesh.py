@@ -1,0 +1,23 @@
+"""Production mesh construction.
+
+Defined as functions (never module-level constants) so importing this module
+never touches JAX device state.  The production target is a TPU v5e pod
+slice: 16x16 = 256 chips per pod, 2 pods = 512 chips for the multi-pod
+configuration.  The dry-run materializes the same meshes over forced host
+devices (see dryrun.py).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 2, model: int = 4):
+    """Small mesh over host devices for tests (requires XLA_FLAGS forcing
+    >= data*model host devices)."""
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,126 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch, shape, mesh) cell, in seconds:
+
+  compute   = HLO_FLOPs / (chips * 197e12)        [bf16 MXU peak, v5e]
+  memory    = HLO_bytes / (chips * 819e9)         [HBM bandwidth]
+  collective= sum over collective ops of result_bytes / 50e9 per hop
+              (ICI ~50 GB/s/link; ring schedules move ~result_bytes per
+              device for all-gather/all-reduce/reduce-scatter)
+
+``cost_analysis()`` supplies FLOPs/bytes (already per-device on the
+partitioned module); collective bytes are parsed from the post-SPMD HLO text
+since cost_analysis does not expose them.
+"""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12       # bf16 per chip
+HBM_BW = 819e9            # bytes/s per chip
+ICI_BW = 50e9             # bytes/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8,
+    "c64": 8, "c128": 16,
+}
+
+COLLECTIVE_KINDS = ("all-gather", "all-reduce", "reduce-scatter",
+                    "all-to-all", "collective-permute")
+
+# e.g.:  %all-reduce.5 = bf16[16,512]{1,0} all-reduce(...)
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^=]*?\s"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    total = nbytes
+    if dims.strip():
+        for d in dims.split(","):
+            total *= int(d)
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_kind: Dict[str, int] = field(default_factory=dict)
+    count_by_kind: Dict[str, int] = field(default_factory=dict)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_kind.values())
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    stats = CollectiveStats()
+    for m in _OP_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        # ignore the -done halves of async pairs (counted at -start)
+        pos = m.end()
+        if hlo_text[m.start():pos].find(f"{kind}-done(") >= 0:
+            continue
+        b = _shape_bytes(dtype, dims)
+        stats.bytes_by_kind[kind] = stats.bytes_by_kind.get(kind, 0) + b
+        stats.count_by_kind[kind] = stats.count_by_kind.get(kind, 0) + 1
+    return stats
+
+
+@dataclass
+class RooflineTerms:
+    flops: float                 # per-device HLO flops
+    hbm_bytes: float             # per-device bytes accessed
+    collective_bytes: float      # per-device collective result bytes
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    collectives: Dict[str, int] = field(default_factory=dict)
+    collective_counts: Dict[str, int] = field(default_factory=dict)
+
+    def as_dict(self) -> Dict:
+        return {
+            "flops": self.flops,
+            "hbm_bytes": self.hbm_bytes,
+            "collective_bytes": self.collective_bytes,
+            "compute_s": self.compute_s,
+            "memory_s": self.memory_s,
+            "collective_s": self.collective_s,
+            "dominant": self.dominant,
+            "collectives": self.collectives,
+            "collective_counts": self.collective_counts,
+        }
+
+
+def roofline_terms(cost: Dict, hlo_text: str) -> RooflineTerms:
+    flops = float(cost.get("flops", 0.0))
+    hbm = float(cost.get("bytes accessed", 0.0))
+    coll = parse_collectives(hlo_text)
+    compute_s = flops / PEAK_FLOPS
+    memory_s = hbm / HBM_BW
+    collective_s = coll.total_bytes / ICI_BW
+    dominant = max(
+        (("compute", compute_s), ("memory", memory_s),
+         ("collective", collective_s)),
+        key=lambda kv: kv[1])[0]
+    return RooflineTerms(
+        flops=flops, hbm_bytes=hbm, collective_bytes=coll.total_bytes,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, collectives=coll.bytes_by_kind,
+        collective_counts=coll.count_by_kind)
+
+
+def model_flops(param_count: int, active_param_count: int,
+                tokens: int, mode: str) -> float:
+    """MODEL_FLOPS = 6*N*D for training, 2*N*D for inference (per step)."""
+    n = active_param_count
+    if mode == "train":
+        return 6.0 * n * tokens
+    return 2.0 * n * tokens

@@ -1,0 +1,46 @@
+"""Serving launcher: batched generation against an --arch config.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch mamba2-1.3b --smoke \
+      --batch 4 --tokens 16
+"""
+from __future__ import annotations
+
+import argparse
+
+import jax
+import numpy as np
+
+from ..configs import ARCH_IDS, get_config, get_smoke
+from ..configs.base import RunConfig
+from ..models.model import Model
+from ..serve.engine import ServeConfig, ServeEngine
+
+
+def main() -> None:
+    p = argparse.ArgumentParser()
+    p.add_argument("--arch", choices=ARCH_IDS, default="llama3.2-3b")
+    p.add_argument("--smoke", action="store_true")
+    p.add_argument("--batch", type=int, default=4)
+    p.add_argument("--prompt-len", type=int, default=8)
+    p.add_argument("--tokens", type=int, default=16)
+    p.add_argument("--temperature", type=float, default=0.0)
+    args = p.parse_args()
+
+    cfg = get_smoke(args.arch) if args.smoke else get_config(args.arch)
+    if cfg.enc_layers:
+        raise SystemExit("whisper serving needs encoder frames; see "
+                         "tests/test_models_smoke.py::test_smoke_decode_step")
+    model = Model(cfg, RunConfig(remat="none", attn_chunk=256))
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, ServeConfig(
+        max_len=args.prompt_len + args.tokens + 1,
+        temperature=args.temperature))
+    prompts = np.random.RandomState(0).randint(
+        0, cfg.vocab_size, size=(args.batch, args.prompt_len)).astype(np.int32)
+    out = engine.generate(prompts, args.tokens)
+    print(f"{cfg.name}: generated {out.shape}")
+    print(out)
+
+
+if __name__ == "__main__":
+    main()

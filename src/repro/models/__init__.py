@@ -1,0 +1,8 @@
+from .model import (DecodeState, Model, decode_state_spec, init_decode_state,
+                    model_defs)
+from .params import (ParamDef, axes_tree, count_params, init_tree, shape_tree,
+                     stack)
+
+__all__ = ["Model", "DecodeState", "decode_state_spec", "init_decode_state",
+           "model_defs", "ParamDef", "axes_tree", "count_params", "init_tree",
+           "shape_tree", "stack"]

@@ -1,0 +1,425 @@
+"""GQA attention with RoPE, optional QKV bias, flash-style chunking, KV cache.
+
+Shapes: hidden (B, S, d); q (B, S, H, hd); k/v (B, S, KV, hd).
+Chunked attention (``attn_chunk``) avoids materializing (S, S) score tensors:
+an online-softmax scan over KV blocks inside a map over Q blocks — the
+TPU-native replacement for the quadratic einsum at 32k+ context.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, RunConfig
+from .common import apply_rope
+from .params import ParamDef
+
+NEG_INF = -1e30
+
+_U = jax.sharding.PartitionSpec.UNCONSTRAINED
+
+
+def _mesh_has_model() -> bool:
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        return mesh is not None and "model" in (mesh.axis_names or ())
+    except Exception:  # noqa: BLE001 — no mesh context (CPU tests)
+        return False
+
+
+def shard_attention_inputs(q, k, v):
+    """Sequence-sharded attention layout (EXPERIMENTS.md §Perf iter 3).
+
+    Head counts rarely divide the 16-way ``model`` axis (24, 36, 8-KV GQA
+    heads...), and mid-head sharding of the flattened (H*hd) projection makes
+    GSPMD reshard *score-sized* tensors (~22 GB/layer all-reduces measured on
+    llama3.2-3b train_4k).  Instead: q is sharded along SEQUENCE over
+    ``model`` and k/v are replicated over ``model`` (an all-gather of
+    KV-projected activations, ~0.27 GB/layer) — attention math is unchanged,
+    every head stays intact on every shard.
+    """
+    if not _mesh_has_model():
+        return q, k, v
+    P = jax.sharding.PartitionSpec
+    mesh = jax.sharding.get_abstract_mesh()
+    msize = dict(zip(mesh.axis_names, mesh.axis_sizes))["model"]
+    if q.shape[2] % msize == 0:
+        # whole heads per shard: classic megatron head parallelism
+        q = jax.lax.with_sharding_constraint(q, P(_U, _U, "model", _U))
+    else:
+        # heads don't divide the axis: keep q replicated over model rather
+        # than letting GSPMD shard mid-head (score-sized reshards)
+        q = jax.lax.with_sharding_constraint(q, P(_U, None, None, None))
+    k = jax.lax.with_sharding_constraint(k, P(_U, None, None, None))
+    v = jax.lax.with_sharding_constraint(v, P(_U, None, None, None))
+    return q, k, v
+
+
+
+def attention_defs(cfg: ModelConfig, cross: bool = False) -> Dict[str, ParamDef]:
+    d, h, kv = cfg.d_model, cfg.num_heads, cfg.num_kv_heads
+    hd = cfg.resolved_head_dim()
+    defs = {
+        "wq": ParamDef((d, h * hd), ("embed", "heads"), fan_in=d),
+        "wk": ParamDef((d, kv * hd), ("embed", "kv"), fan_in=d),
+        "wv": ParamDef((d, kv * hd), ("embed", "kv"), fan_in=d),
+        "wo": ParamDef((h * hd, d), ("heads", "embed"),
+                       fan_in=h * hd, scale=1.0 / math.sqrt(2 * cfg.num_layers)),
+    }
+    if cfg.qkv_bias and not cross:
+        defs["bq"] = ParamDef((h * hd,), ("heads",), init="zeros")
+        defs["bk"] = ParamDef((kv * hd,), ("kv",), init="zeros")
+        defs["bv"] = ParamDef((kv * hd,), ("kv",), init="zeros")
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# score computation
+# ---------------------------------------------------------------------------
+
+
+def _project(params, x, cfg: ModelConfig, compute_dtype):
+    B, S, _ = x.shape
+    h, kv, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim()
+    xc = x.astype(compute_dtype)
+    q = xc @ params["wq"].astype(compute_dtype)
+    k = xc @ params["wk"].astype(compute_dtype)
+    v = xc @ params["wv"].astype(compute_dtype)
+    if "bq" in params:
+        q = q + params["bq"].astype(compute_dtype)
+        k = k + params["bk"].astype(compute_dtype)
+        v = v + params["bv"].astype(compute_dtype)
+    return (q.reshape(B, S, h, hd), k.reshape(B, S, kv, hd),
+            v.reshape(B, S, kv, hd))
+
+
+def _gqa_scores(q, k):
+    """q: (B, Sq, H, hd), k: (B, Sk, KV, hd) -> (B, KV, G, Sq, Sk)."""
+    B, Sq, H, hd = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Sq, KV, G, hd)
+    return jnp.einsum("bsktd,bukd->bktsu", qg, k) / math.sqrt(hd)
+
+
+def _gqa_out(probs, v):
+    """probs: (B, KV, G, Sq, Sk), v: (B, Sk, KV, hd) -> (B, Sq, H, hd)."""
+    B, KV, G, Sq, Sk = probs.shape
+    out = jnp.einsum("bktsu,bukd->bsktd", probs, v)
+    return out.reshape(B, Sq, KV * G, -1)
+
+
+def full_attention(q, k, v, *, causal: bool, q_offset: int = 0,
+                   prefix_len: int = 0) -> jax.Array:
+    """Reference (unchunked) attention; mask: causal with an optional
+    bidirectional prefix (PaliGemma-style prefix-LM)."""
+    scores = _gqa_scores(q, k).astype(jnp.float32)
+    Sq, Sk = scores.shape[-2], scores.shape[-1]
+    if causal:
+        qpos = q_offset + jnp.arange(Sq)[:, None]
+        kpos = jnp.arange(Sk)[None, :]
+        mask = kpos <= qpos
+        if prefix_len:
+            mask = mask | (kpos < prefix_len)
+        scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    return _gqa_out(probs, v)
+
+
+def chunked_attention(q, k, v, *, causal: bool, chunk: int,
+                      q_offset: int = 0, prefix_len: int = 0) -> jax.Array:
+    """Flash-style attention with a hand-written backward (custom_vjp).
+
+    Differentiating through the online-softmax scan would checkpoint every
+    KV-step carry (measured: 254 GB temp per device on llama3.2-3b train_4k —
+    EXPERIMENTS.md §Perf iteration 1); the custom backward recomputes score
+    blocks instead, mirroring the TPU flash-attention kernel schedule.
+    """
+    if q.shape[1] <= chunk and k.shape[1] <= chunk:
+        return full_attention(q, k, v, causal=causal, q_offset=q_offset,
+                              prefix_len=prefix_len)
+    if q.shape[1] % min(chunk, q.shape[1]) or k.shape[1] % min(chunk, k.shape[1]):
+        return full_attention(q, k, v, causal=causal, q_offset=q_offset,
+                              prefix_len=prefix_len)
+    return _flash(q, k, v, causal, chunk, q_offset, prefix_len)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6))
+def _flash(q, k, v, causal, chunk, q_offset, prefix_len):
+    out, _ = _flash_fwd_impl(q, k, v, causal, chunk, q_offset, prefix_len)
+    return out
+
+
+def _block_mask(qi, ki, qc, kc, q_offset, prefix_len):
+    qpos = q_offset + qi * qc + jnp.arange(qc)[:, None]
+    kpos = ki * kc + jnp.arange(kc)[None, :]
+    mask = kpos <= qpos
+    if prefix_len:
+        mask = mask | (kpos < prefix_len)
+    return mask
+
+
+def _flash_fwd_impl(q, k, v, causal, chunk, q_offset, prefix_len):
+    """Returns (out, lse); lse: (B, KV, G, Sq) log-sum-exp of scores."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    qc = min(chunk, Sq)
+    kc = min(chunk, Sk)
+    nq, nk = Sq // qc, Sk // kc
+    k_chunks = k.reshape(B, nk, kc, KV, hd).transpose(1, 0, 2, 3, 4)
+    v_chunks = v.reshape(B, nk, kc, KV, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_block(args):
+        qi, qblk = args
+        m0 = jnp.full((B, KV, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        acc0 = jnp.zeros((B, qc, H, hd), jnp.float32)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            ki, kblk, vblk = inputs
+            s = _gqa_scores(qblk, kblk).astype(jnp.float32)
+            if causal:
+                s = jnp.where(_block_mask(qi, ki, qc, kc, q_offset,
+                                          prefix_len), s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            scale = jnp.exp(m - m_new)
+            l_new = l * scale + p.sum(axis=-1)
+            pv = jnp.einsum("bktsu,bukd->bsktd", p.astype(qblk.dtype),
+                            vblk).astype(jnp.float32)
+            pv = pv.reshape(B, qc, H, hd)
+            scale_acc = scale.transpose(0, 3, 1, 2).reshape(B, qc, H)
+            return (m_new, l_new, acc * scale_acc[..., None] + pv), None
+
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, acc0), (jnp.arange(nk), k_chunks, v_chunks))
+        l_t = l.transpose(0, 3, 1, 2).reshape(B, qc, H)
+        out = (acc / jnp.maximum(l_t, 1e-30)[..., None]).astype(q.dtype)
+        lse = m + jnp.log(jnp.maximum(l, 1e-30))
+        return out, lse
+
+    q_blocks = q.reshape(B, nq, qc, H, hd).transpose(1, 0, 2, 3, 4)
+    outs, lses = jax.lax.map(q_block, (jnp.arange(nq), q_blocks))
+    out = outs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+    lse = jnp.moveaxis(lses, 0, 3).reshape(B, KV, G, Sq)
+    return out, lse
+
+
+def _flash_fwd(q, k, v, causal, chunk, q_offset, prefix_len):
+    out, lse = _flash_fwd_impl(q, k, v, causal, chunk, q_offset, prefix_len)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_bwd(causal, chunk, q_offset, prefix_len, res, do):
+    q, k, v, out, lse = res
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    KV = k.shape[2]
+    G = H // KV
+    qc = min(chunk, Sq)
+    kc = min(chunk, Sk)
+    nq, nk = Sq // qc, Sk // kc
+    inv = 1.0 / math.sqrt(hd)
+    # delta = rowsum(do * out) per q position, in (B, KV, G, Sq) layout
+    delta = (do.astype(jnp.float32) * out.astype(jnp.float32)).sum(-1)
+    delta = delta.reshape(B, Sq, KV, G).transpose(0, 2, 3, 1)
+
+    def r5(t, n, c):  # (B, S, KV, hd) -> (n, B, c, KV, hd)
+        return t.reshape(B, n, c, t.shape[2], hd).transpose(1, 0, 2, 3, 4)
+
+    q_blocks = r5(q, nq, qc)
+    do_blocks = r5(do, nq, qc)
+    lse_blocks = lse.reshape(B, KV, G, nq, qc).transpose(3, 0, 1, 2, 4)
+    delta_blocks = delta.reshape(B, KV, G, nq, qc).transpose(3, 0, 1, 2, 4)
+    k_chunks = r5(k, nk, kc)
+    v_chunks = r5(v, nk, kc)
+
+    def kv_outer(dq_acc, kv_in):
+        ki, kblk, vblk = kv_in
+
+        def q_inner(args):
+            qi, qblk, doblk, lseb, deltab = args
+            s = _gqa_scores(qblk, kblk).astype(jnp.float32)
+            if causal:
+                s = jnp.where(_block_mask(qi, ki, qc, kc, q_offset,
+                                          prefix_len), s, NEG_INF)
+            p = jnp.exp(s - lseb[..., None])              # (B,KV,G,qc,kc)
+            dog = doblk.astype(jnp.float32).reshape(B, qc, KV, G, hd)
+            dv_c = jnp.einsum("bkgsu,bskgd->bukd", p, dog)
+            dp = jnp.einsum("bskgd,bukd->bkgsu", dog, vblk.astype(jnp.float32))
+            ds = p * (dp - deltab[..., None])
+            dq_c = jnp.einsum("bkgsu,bukd->bskgd", ds,
+                              kblk.astype(jnp.float32)) * inv
+            dk_c = jnp.einsum("bkgsu,bskgd->bukd", ds,
+                              q_blocks[qi].astype(jnp.float32).reshape(
+                                  B, qc, KV, G, hd)) * inv
+            return dq_c.reshape(B, qc, H, hd), dk_c, dv_c
+
+        dqs, dks, dvs = jax.lax.map(
+            q_inner, (jnp.arange(nq), q_blocks, do_blocks, lse_blocks,
+                      delta_blocks))
+        dq_acc = dq_acc + dqs.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+        return dq_acc, (dks.sum(0), dvs.sum(0))
+
+    dq0 = jnp.zeros((B, Sq, H, hd), jnp.float32)
+    dq, (dks, dvs) = jax.lax.scan(kv_outer, dq0,
+                                  (jnp.arange(nk), k_chunks, v_chunks))
+    dk = dks.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KV, hd)
+    dv = dvs.transpose(1, 0, 2, 3, 4).reshape(B, Sk, KV, hd)
+    return dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype)
+
+
+_flash.defvjp(_flash_fwd, _flash_bwd)
+
+
+def _chunked_attention_scan_bwd(q, k, v, *, causal: bool, chunk: int,
+                                q_offset: int = 0, prefix_len: int = 0) -> jax.Array:
+    """The pre-custom-vjp variant (autodiff through the scan); kept as the
+    §Perf baseline and for gradient cross-checks."""
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    if Sq <= chunk and Sk <= chunk:
+        return full_attention(q, k, v, causal=causal, q_offset=q_offset,
+                              prefix_len=prefix_len)
+    qc = max(1, min(chunk, Sq))
+    kc = max(1, min(chunk, Sk))
+    if Sq % qc or Sk % kc:
+        return full_attention(q, k, v, causal=causal, q_offset=q_offset,
+                              prefix_len=prefix_len)
+    nq, nk = Sq // qc, Sk // kc
+    KV = k.shape[2]
+    G = H // KV
+    k_chunks = k.reshape(B, nk, kc, KV, hd)
+    v_chunks = v.reshape(B, nk, kc, KV, hd)
+
+    def q_block(carry_q):
+        qi, qblk = carry_q  # qblk: (B, qc, H, hd)
+        m0 = jnp.full((B, KV, G, qc), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, KV, G, qc), jnp.float32)
+        acc0 = jnp.zeros((B, qc, H, hd), jnp.float32)
+
+        def kv_step(carry, inputs):
+            m, l, acc = carry
+            ki, kblk, vblk = inputs
+            s = _gqa_scores(qblk, kblk).astype(jnp.float32)  # (B,KV,G,qc,kc)
+            if causal:
+                qpos = q_offset + qi * qc + jnp.arange(qc)[:, None]
+                kpos = ki * kc + jnp.arange(kc)[None, :]
+                mask = kpos <= qpos
+                if prefix_len:
+                    mask = mask | (kpos < prefix_len)
+                s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            scale = jnp.exp(m - m_new)
+            l_new = l * scale + p.sum(axis=-1)
+            pv = jnp.einsum("bktsu,bukd->bsktd", p.astype(qblk.dtype),
+                            vblk).astype(jnp.float32)
+            pv = pv.reshape(B, qc, H, hd)
+            scale_acc = scale.transpose(0, 3, 1, 2).reshape(B, qc, H)
+            acc_new = acc * scale_acc[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        ks = jnp.arange(nk)
+        (m, l, acc), _ = jax.lax.scan(
+            kv_step, (m0, l0, acc0),
+            (ks, k_chunks.transpose(1, 0, 2, 3, 4),
+             v_chunks.transpose(1, 0, 2, 3, 4)))
+        l_t = l.transpose(0, 3, 1, 2).reshape(B, qc, H)
+        return (acc / jnp.maximum(l_t, 1e-30)[..., None]).astype(q.dtype)
+
+    q_blocks = q.reshape(B, nq, qc, H, hd).transpose(1, 0, 2, 3, 4)
+    out = jax.lax.map(q_block, (jnp.arange(nq), q_blocks))
+    return out.transpose(1, 0, 2, 3, 4).reshape(B, Sq, H, hd)
+
+
+# ---------------------------------------------------------------------------
+# public entry points
+# ---------------------------------------------------------------------------
+
+
+class KVCache(NamedTuple):
+    k: jax.Array  # (B, S_max, KV, hd)
+    v: jax.Array
+
+
+def attention(params, x, cfg: ModelConfig, run: RunConfig, *,
+              positions: Optional[jax.Array] = None,
+              causal: bool = True, prefix_len: int = 0,
+              use_rope: bool = True) -> jax.Array:
+    """Training / prefill self-attention over the whole sequence."""
+    compute = jnp.dtype(run.compute_dtype)
+    B, S, _ = x.shape
+    q, k, v = _project(params, x, cfg, compute)
+    if positions is None:
+        positions = jnp.arange(S)[None, :]
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    q, k, v = shard_attention_inputs(q, k, v)
+    out = chunked_attention(q, k, v, causal=causal, chunk=run.attn_chunk,
+                            prefix_len=prefix_len)
+    out = out.reshape(B, S, -1)
+    return out @ params["wo"].astype(compute)
+
+
+def attention_decode(params, x, cache: KVCache, pos: jax.Array,
+                     cfg: ModelConfig, run: RunConfig, *,
+                     use_rope: bool = True) -> Tuple[jax.Array, KVCache]:
+    """One-token decode: update the cache at ``pos`` and attend over it.
+
+    x: (B, 1, d); pos: scalar int32 (current length).
+    """
+    compute = jnp.dtype(run.compute_dtype)
+    B = x.shape[0]
+    q, k, v = _project(params, x, cfg, compute)
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    if use_rope:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    k_cache = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), pos, axis=1)
+    v_cache = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), pos, axis=1)
+    scores = _gqa_scores(q, k_cache.astype(compute)).astype(jnp.float32)
+    S_max = k_cache.shape[1]
+    valid = jnp.arange(S_max)[None, :] <= pos
+    scores = jnp.where(valid[:, None, None, None, :].squeeze(0), scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(compute)
+    out = _gqa_out(probs, v_cache.astype(compute)).reshape(B, 1, -1)
+    out = out @ params["wo"].astype(compute)
+    return out, KVCache(k=k_cache, v=v_cache)
+
+
+def cross_attention(params, x, enc_kv: Tuple[jax.Array, jax.Array],
+                    cfg: ModelConfig, run: RunConfig) -> jax.Array:
+    """Decoder cross-attention over precomputed encoder K/V (whisper)."""
+    compute = jnp.dtype(run.compute_dtype)
+    B, S, _ = x.shape
+    h, hd = cfg.num_heads, cfg.resolved_head_dim()
+    q = (x.astype(compute) @ params["wq"].astype(compute)).reshape(B, S, h, hd)
+    k, v = enc_kv
+    scores = _gqa_scores(q, k.astype(compute)).astype(jnp.float32)
+    probs = jax.nn.softmax(scores, axis=-1).astype(compute)
+    out = _gqa_out(probs, v.astype(compute)).reshape(B, S, -1)
+    return out @ params["wo"].astype(compute)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim()
+    shape = (batch, max_len, kv, hd)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype))
+
+
+def cache_spec(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> KVCache:
+    kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim()
+    shape = (batch, max_len, kv, hd)
+    return KVCache(k=jax.ShapeDtypeStruct(shape, dtype),
+                   v=jax.ShapeDtypeStruct(shape, dtype))

@@ -1,0 +1,62 @@
+"""Shared layer math: norms, activations, RoPE, einsum with dtype policy."""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    out = x32 * jax.lax.rsqrt(var + eps)
+    return (out * (1.0 + weight.astype(jnp.float32))).astype(dtype)
+
+
+def layer_norm(x: jax.Array, weight: jax.Array, bias: jax.Array,
+               eps: float = 1e-5) -> jax.Array:
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    mean = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    out = (x32 - mean) * jax.lax.rsqrt(var + eps)
+    return (out * weight.astype(jnp.float32)
+            + bias.astype(jnp.float32)).astype(dtype)
+
+
+def activate(x: jax.Array, kind: str) -> jax.Array:
+    if kind == "silu":
+        return jax.nn.silu(x)
+    if kind == "gelu":
+        return jax.nn.gelu(x, approximate=True)
+    raise ValueError(kind)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, n_heads, head_dim); positions: broadcastable to (..., S)."""
+    head_dim = x.shape[-1]
+    freqs = rope_freqs(head_dim, theta)                       # (half,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, half)
+    cos = jnp.cos(angles)[..., None, :]                        # (..., S, 1, half)
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def dot(x: jax.Array, w: jax.Array, compute_dtype=jnp.bfloat16) -> jax.Array:
+    """Cast-to-compute-dtype matmul on the last axis of x."""
+    return jnp.einsum("...d,df->...f", x.astype(compute_dtype),
+                      w.astype(compute_dtype))

@@ -1,0 +1,117 @@
+"""Fused softmax-cross-entropy from hidden states (never materializes logits).
+
+At 128k-256k vocabularies the (B, S, V) fp32 logits + softmax temporaries +
+dlogits dominate training memory (measured ~100+ GB/device on llama3.2-3b
+train_4k — EXPERIMENTS.md §Perf iteration 2).  This computes CE in token
+chunks with a custom VJP: forward keeps only per-token log-sum-exp and the
+label logit; backward recomputes each chunk's logits and contracts them
+immediately into dh and dW.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+CHUNK = 2048  # tokens per chunk; (CHUNK, V) is the transient footprint
+
+
+def _pad_to_chunks(x, chunk):
+    t = x.shape[0]
+    pad = (-t) % chunk
+    if pad:
+        padding = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        x = jnp.pad(x, padding)
+    return x, t
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(4,))
+def fused_cross_entropy(hidden, w, labels, mask, compute_dtype=jnp.bfloat16):
+    """hidden: (T, d); w: (d, V); labels: (T,); mask: (T,) f32.
+
+    Returns (sum of -log p(label) * mask, sum of mask)."""
+    loss_sum, _, _ = _ce_fwd_scan(hidden, w, labels, mask, compute_dtype)
+    return loss_sum, mask.sum()
+
+
+def _ce_fwd_scan(hidden, w, labels, mask, compute_dtype):
+    (h, T) = _pad_to_chunks(hidden, CHUNK)
+    (lab, _) = _pad_to_chunks(labels, CHUNK)
+    (msk, _) = _pad_to_chunks(mask, CHUNK)
+    n = h.shape[0] // CHUNK
+    hc = h.reshape(n, CHUNK, -1)
+    labc = lab.reshape(n, CHUNK)
+    mskc = msk.reshape(n, CHUNK)
+    wc = w.astype(compute_dtype)
+
+    def chunk_step(loss_sum, inputs):
+        hck, labk, mskk = inputs
+        logits = (hck.astype(compute_dtype) @ wc).astype(jnp.float32)
+        lse = jax.scipy.special.logsumexp(logits, axis=-1)
+        ll = jnp.take_along_axis(logits, labk[:, None], axis=-1)[:, 0]
+        loss_sum = loss_sum + ((lse - ll) * mskk).sum()
+        return loss_sum, lse
+
+    loss_sum, lses = jax.lax.scan(
+        chunk_step, jnp.zeros((), jnp.float32), (hc, labc, mskc))
+    return loss_sum, lses.reshape(-1)[:T], T
+
+
+def _ce_fwd(hidden, w, labels, mask, compute_dtype):
+    loss_sum, lse, T = _ce_fwd_scan(hidden, w, labels, mask, compute_dtype)
+    return (loss_sum, mask.sum()), (hidden, w, labels, mask, lse)
+
+
+def _ce_bwd(compute_dtype, res, grads):
+    dloss, _ = grads  # gradient wrt (loss_sum, mask_sum); mask not diff'd
+    hidden, w, labels, mask, lse = res
+    (h, T) = _pad_to_chunks(hidden, CHUNK)
+    (lab, _) = _pad_to_chunks(labels, CHUNK)
+    (msk, _) = _pad_to_chunks(mask, CHUNK)
+    (lsep, _) = _pad_to_chunks(lse, CHUNK)
+    n = h.shape[0] // CHUNK
+    hc = h.reshape(n, CHUNK, -1)
+    labc = lab.reshape(n, CHUNK)
+    mskc = msk.reshape(n, CHUNK)
+    lsec = lsep.reshape(n, CHUNK)
+    wc = w.astype(compute_dtype)
+
+    def chunk_step(dw_acc, inputs):
+        hck, labk, mskk, lsek = inputs
+        logits = (hck.astype(compute_dtype) @ wc).astype(jnp.float32)
+        p = jnp.exp(logits - lsek[:, None])
+        coeff = (mskk * dloss)[:, None]
+        dlogits = p * coeff
+        dlogits = dlogits.at[jnp.arange(CHUNK), labk].add(-coeff[:, 0])
+        dlogits_c = dlogits.astype(compute_dtype)
+        dh = (dlogits_c @ wc.T).astype(jnp.float32)
+        dw_acc = dw_acc + hck.astype(compute_dtype).T @ dlogits_c
+        return dw_acc, dh
+
+    dw0 = jnp.zeros(w.shape, compute_dtype)
+    dw, dhs = jax.lax.scan(chunk_step, dw0, (hc, labc, mskc, lsec))
+    dh = dhs.reshape(-1, hidden.shape[-1])[:T].astype(hidden.dtype)
+    return dh, dw.astype(w.dtype), None, None
+
+
+fused_cross_entropy.defvjp(_ce_fwd, _ce_bwd)
+
+
+def cross_entropy_from_hidden(hidden, w, labels, mask,
+                              compute_dtype=jnp.bfloat16) -> jax.Array:
+    """Mean masked CE over (B, S, d) hidden states without full logits."""
+    B, S, d = hidden.shape
+    loss_sum, mask_sum = fused_cross_entropy(
+        hidden.reshape(B * S, d), w, labels.reshape(-1),
+        mask.reshape(-1).astype(jnp.float32), compute_dtype)
+    return loss_sum / jnp.maximum(mask_sum, 1.0)
+
+
+def cross_entropy_reference(logits, labels, mask) -> jax.Array:
+    """Oracle: plain full-logits CE (tests compare against this)."""
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    ll = jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = mask.astype(jnp.float32)
+    return -(ll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,29 @@
+"""Gated MLP (SwiGLU / GeGLU)."""
+from __future__ import annotations
+
+import math
+from typing import Dict
+
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, RunConfig
+from .common import activate
+from .params import ParamDef
+
+
+def mlp_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamDef((d, f), ("embed", "mlp"), fan_in=d),
+        "w_in": ParamDef((d, f), ("embed", "mlp"), fan_in=d),
+        "w_out": ParamDef((f, d), ("mlp", "embed"),
+                          fan_in=f, scale=1.0 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def mlp_apply(params, x, cfg: ModelConfig, run: RunConfig):
+    compute = jnp.dtype(run.compute_dtype)
+    xc = x.astype(compute)
+    gate = activate(xc @ params["w_gate"].astype(compute), cfg.act)
+    up = xc @ params["w_in"].astype(compute)
+    return (gate * up) @ params["w_out"].astype(compute)

@@ -1,0 +1,413 @@
+"""Model assembly for all assigned architecture families.
+
+A model is a stack of ``num_repeats`` identical *layer groups* (the repeating
+block pattern: 1 layer for uniform stacks, 8 for jamba's mamba/attention
+interleave, ...).  Group parameters are stacked on a leading ``layers`` axis
+and the stack is traversed with ``lax.scan`` — one group gets compiled once
+regardless of depth (critical at 80-126 layers), and decode threads the
+per-group KV/SSM state through the same scan.
+
+Families:
+* dense / moe / hybrid / ssm — decoder-only LM (tokens in, logits out)
+* vlm (paligemma) — precomputed patch embeddings prepended, prefix-LM mask
+* encdec (whisper) — stub frame embeddings -> bidirectional encoder; causal
+  decoder with cross-attention.
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Any, Dict, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ATTN, MAMBA, ModelConfig, RunConfig
+from . import attention as attn_mod
+from . import mlp as mlp_mod
+from . import moe as moe_mod
+from . import ssm as ssm_mod
+from .common import rms_norm
+from .params import ParamDef, axes_tree, init_tree, shape_tree, stack
+
+
+# ---------------------------------------------------------------------------
+# parameter trees
+# ---------------------------------------------------------------------------
+
+
+def _group_defs(cfg: ModelConfig, with_cross: bool = False) -> Dict[str, Any]:
+    """Param defs for one layer group (dict keyed by position-in-group)."""
+    period = cfg.pattern_period()
+    group: Dict[str, Any] = {}
+    for j in range(period):
+        kind = cfg.layer_kind(j)
+        layer: Dict[str, Any] = {
+            "ln1": ParamDef((cfg.d_model,), ("embed",), init="zeros"),
+            "ln2": ParamDef((cfg.d_model,), ("embed",), init="zeros"),
+        }
+        if kind == ATTN:
+            layer["attn"] = attn_mod.attention_defs(cfg)
+        else:
+            layer["ssm"] = ssm_mod.ssm_defs(cfg)
+        if cfg.is_moe_layer(j):
+            layer["moe"] = moe_mod.moe_defs(cfg)
+        else:
+            layer["mlp"] = mlp_mod.mlp_defs(cfg)
+        if with_cross:
+            layer["ln_cross"] = ParamDef((cfg.d_model,), ("embed",),
+                                         init="zeros")
+            layer["cross"] = attn_mod.attention_defs(cfg, cross=True)
+        group[str(j)] = layer
+    return group
+
+
+def model_defs(cfg: ModelConfig) -> Dict[str, Any]:
+    d = cfg.d_model
+    defs: Dict[str, Any] = {
+        "embed": ParamDef((cfg.vocab_size, d), ("vocab", "embed"),
+                          scale=1.0),
+        "final_norm": ParamDef((d,), ("embed",), init="zeros"),
+        "layers": stack(_group_defs(cfg, with_cross=bool(cfg.enc_layers)),
+                        cfg.num_repeats()),
+    }
+    if not cfg.tie_embeddings:
+        defs["lm_head"] = ParamDef((d, cfg.vocab_size), ("embed", "vocab"),
+                                   fan_in=d)
+    if cfg.enc_layers:
+        enc_group = {
+            "ln1": ParamDef((d,), ("embed",), init="zeros"),
+            "ln2": ParamDef((d,), ("embed",), init="zeros"),
+            "attn": attn_mod.attention_defs(cfg),
+            "mlp": mlp_mod.mlp_defs(cfg),
+        }
+        defs["encoder"] = {
+            "layers": stack({"0": enc_group}, cfg.enc_layers),
+            "final_norm": ParamDef((d,), ("embed",), init="zeros"),
+        }
+    if cfg.num_patches:
+        # projection stub for the provided patch embeddings
+        defs["patch_proj"] = ParamDef((d, d), ("embed", "embed2"), fan_in=d)
+    return defs
+
+
+# ---------------------------------------------------------------------------
+# decode state
+# ---------------------------------------------------------------------------
+
+
+class DecodeState(NamedTuple):
+    caches: Any          # per-group dict: KVCache / SSMState stacked (R, ...)
+    cross_kv: Any        # encdec only: (k, v) stacked (R, B, Senc, KV, hd)
+    pos: jax.Array       # scalar int32 — current sequence length
+
+
+def _group_cache(cfg: ModelConfig, batch: int, max_len: int, make):
+    period = cfg.pattern_period()
+    out = {}
+    for j in range(period):
+        if cfg.layer_kind(j) == ATTN:
+            out[str(j)] = make("attn", batch, max_len)
+        else:
+            out[str(j)] = make("ssm", batch, max_len)
+    return out
+
+
+def decode_state_spec(cfg: ModelConfig, batch: int, max_len: int,
+                      cache_dtype=jnp.bfloat16) -> DecodeState:
+    R = cfg.num_repeats()
+
+    def make(kind, b, s):
+        if kind == "attn":
+            c = attn_mod.cache_spec(cfg, b, s, cache_dtype)
+        else:
+            c = ssm_mod.state_spec(cfg, b, jnp.float32)
+        return jax.tree_util.tree_map(
+            lambda x: jax.ShapeDtypeStruct((R,) + x.shape, x.dtype), c)
+
+    caches = _group_cache(cfg, batch, max_len, make)
+    cross = None
+    if cfg.enc_layers:
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim()
+        shape = (R, batch, cfg.enc_seq, kv, hd)
+        cross = (jax.ShapeDtypeStruct(shape, cache_dtype),
+                 jax.ShapeDtypeStruct(shape, cache_dtype))
+    return DecodeState(caches=caches, cross_kv=cross,
+                       pos=jax.ShapeDtypeStruct((), jnp.int32))
+
+
+def init_decode_state(cfg: ModelConfig, batch: int, max_len: int,
+                      cache_dtype=jnp.bfloat16) -> DecodeState:
+    spec = decode_state_spec(cfg, batch, max_len, cache_dtype)
+    state = jax.tree_util.tree_map(
+        lambda s: jnp.zeros(s.shape, s.dtype), spec,
+        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
+    return state._replace(pos=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# forward passes
+# ---------------------------------------------------------------------------
+
+
+class Model:
+    def __init__(self, cfg: ModelConfig, run: Optional[RunConfig] = None):
+        self.cfg = cfg
+        self.run = run or RunConfig()
+        self.defs = model_defs(cfg)
+
+    # -- params ------------------------------------------------------------------
+
+    def init(self, key: jax.Array):
+        return init_tree(self.defs, key, jnp.dtype(self.run.param_dtype))
+
+    def param_specs(self):
+        return shape_tree(self.defs, jnp.dtype(self.run.param_dtype))
+
+    def logical_axes(self):
+        return axes_tree(self.defs)
+
+    # -- embedding ----------------------------------------------------------------
+
+    def _embed(self, params, tokens):
+        compute = jnp.dtype(self.run.compute_dtype)
+        x = params["embed"].astype(compute)[tokens]
+        if self.cfg.family == "vlm":
+            x = x * math.sqrt(self.cfg.d_model)
+        return x
+
+    def _logits(self, params, x):
+        compute = jnp.dtype(self.run.compute_dtype)
+        x = rms_norm(x, params["final_norm"], self.cfg.norm_eps)
+        head = (params["embed"].T if self.cfg.tie_embeddings
+                else params["lm_head"])
+        return (x.astype(compute) @ head.astype(compute)).astype(jnp.float32)
+
+    # -- one layer group ------------------------------------------------------------
+
+    def _group_forward(self, gparams, x, *, prefix_len: int = 0,
+                       causal: bool = True, enc_out=None):
+        cfg, run = self.cfg, self.run
+        period = cfg.pattern_period() if enc_out is None or cfg.enc_layers == 0 \
+            else cfg.pattern_period()
+        for j in range(len(gparams)):
+            layer = gparams[str(j)]
+            kind = cfg.layer_kind(j)
+            h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+            if kind == ATTN:
+                h = attn_mod.attention(layer["attn"], h, cfg, run,
+                                       causal=causal, prefix_len=prefix_len)
+            else:
+                h = ssm_mod.ssm_apply(layer["ssm"], h, cfg, run)
+            x = x + h
+            if "cross" in layer and enc_out is not None:
+                h = rms_norm(x, layer["ln_cross"], cfg.norm_eps)
+                h = attn_mod.cross_attention(layer["cross"], h, enc_out,
+                                             cfg, run)
+                x = x + h
+            h = rms_norm(x, layer["ln2"], cfg.norm_eps)
+            if "moe" in layer:
+                h = moe_mod.moe_apply(layer["moe"], h, cfg, run)
+            else:
+                h = mlp_mod.mlp_apply(layer["mlp"], h, cfg, run)
+            x = x + h
+        return x
+
+    def _scan_groups(self, params, x, **kw):
+        run = self.run
+
+        def body(carry, gparams):
+            fn = functools.partial(self._group_forward, **kw)
+            if run.remat == "full":
+                fn = jax.checkpoint(fn,
+                                    policy=jax.checkpoint_policies.nothing_saveable)
+            elif run.remat == "dots":
+                fn = jax.checkpoint(
+                    fn,
+                    policy=jax.checkpoint_policies.checkpoint_dots_with_no_batch_dims)
+            return fn(gparams, carry), None
+
+        x, _ = jax.lax.scan(body, x, params["layers"],
+                            unroll=run.scan_unroll)
+        return x
+
+    # -- encoder (whisper) -------------------------------------------------------------
+
+    def _encode(self, params, frame_embeds):
+        cfg, run = self.cfg, self.run
+        x = frame_embeds.astype(jnp.dtype(run.compute_dtype))
+
+        def body(carry, gparams):
+            layer = gparams["0"]
+            h = rms_norm(carry, layer["ln1"], cfg.norm_eps)
+            h = attn_mod.attention(layer["attn"], h, cfg, run, causal=False)
+            carry = carry + h
+            h = rms_norm(carry, layer["ln2"], cfg.norm_eps)
+            carry = carry + mlp_mod.mlp_apply(layer["mlp"], h, cfg, run)
+            return carry, None
+
+        x, _ = jax.lax.scan(body, x, params["encoder"]["layers"],
+                            unroll=run.scan_unroll)
+        return rms_norm(x, params["encoder"]["final_norm"], cfg.norm_eps)
+
+    def _cross_kv_from_enc(self, params, enc_x):
+        """Precompute per-group cross-attention K/V from encoder output."""
+        cfg, run = self.cfg, self.run
+        compute = jnp.dtype(run.compute_dtype)
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim()
+        B, Se, _ = enc_x.shape
+
+        def per_group(gparams):
+            layer = gparams["0"]
+            k = (enc_x.astype(compute)
+                 @ layer["cross"]["wk"].astype(compute)).reshape(B, Se, kv, hd)
+            v = (enc_x.astype(compute)
+                 @ layer["cross"]["wv"].astype(compute)).reshape(B, Se, kv, hd)
+            return k, v
+
+        return jax.vmap(per_group)(params["layers"])
+
+    # -- public: training/prefill forward --------------------------------------------------
+
+    def forward(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        """Returns logits (B, S, vocab) for the text stream."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+        prefix_len = 0
+        if cfg.family == "vlm":
+            compute = jnp.dtype(self.run.compute_dtype)
+            patches = batch["patch_embeds"].astype(compute)
+            patches = patches @ params["patch_proj"].astype(compute)
+            x = jnp.concatenate([patches, x], axis=1)
+            prefix_len = cfg.num_patches
+        enc_out = None
+        if cfg.enc_layers:
+            enc_x = self._encode(params, batch["frame_embeds"])
+            enc_out = enc_x
+            x = self._scan_groups_encdec(params, x, enc_x)
+        else:
+            x = self._scan_groups(params, x, prefix_len=prefix_len)
+        logits = self._logits(params, x)
+        if cfg.family == "vlm":
+            logits = logits[:, prefix_len:]
+        return logits
+
+    def _scan_groups_encdec(self, params, x, enc_x):
+        cfg, run = self.cfg, self.run
+        compute = jnp.dtype(run.compute_dtype)
+        kv, hd = cfg.num_kv_heads, cfg.resolved_head_dim()
+        B, Se, _ = enc_x.shape
+
+        def body(carry, gparams):
+            layer = gparams["0"]
+            k = (enc_x.astype(compute)
+                 @ layer["cross"]["wk"].astype(compute)).reshape(B, Se, kv, hd)
+            v = (enc_x.astype(compute)
+                 @ layer["cross"]["wv"].astype(compute)).reshape(B, Se, kv, hd)
+            fn = functools.partial(self._group_forward, enc_out=(k, v))
+            if run.remat == "full":
+                fn = jax.checkpoint(
+                    fn, policy=jax.checkpoint_policies.nothing_saveable)
+            return fn(gparams, carry), None
+
+        x, _ = jax.lax.scan(body, x, params["layers"],
+                            unroll=run.scan_unroll)
+        return x
+
+    # -- public: decode -----------------------------------------------------------------
+
+    def decode_step(self, params, state: DecodeState,
+                    tokens: jax.Array) -> Tuple[jax.Array, DecodeState]:
+        """tokens: (B, 1) — one decode step over the cached context."""
+        cfg, run = self.cfg, self.run
+        x = self._embed(params, tokens)
+        pos = state.pos
+
+        def body(carry, xs):
+            x = carry
+            if state.cross_kv is not None:
+                gparams, cache, (ck, cv) = xs
+            else:
+                gparams, cache = xs
+            new_cache = {}
+            for j in range(len(gparams)):
+                layer = gparams[str(j)]
+                kind = cfg.layer_kind(j)
+                h = rms_norm(x, layer["ln1"], cfg.norm_eps)
+                if kind == ATTN:
+                    h, nc = attn_mod.attention_decode(
+                        layer["attn"], h, cache[str(j)], pos, cfg, run)
+                else:
+                    h, nc = ssm_mod.ssm_decode(
+                        layer["ssm"], h, cache[str(j)], cfg, run)
+                new_cache[str(j)] = nc
+                x = x + h
+                if "cross" in layer and state.cross_kv is not None:
+                    h = rms_norm(x, layer["ln_cross"], cfg.norm_eps)
+                    h = attn_mod.cross_attention(layer["cross"], h, (ck, cv),
+                                                 cfg, run)
+                    x = x + h
+                h = rms_norm(x, layer["ln2"], cfg.norm_eps)
+                if "moe" in layer:
+                    h = moe_mod.moe_apply(layer["moe"], h, cfg, run)
+                else:
+                    h = mlp_mod.mlp_apply(layer["mlp"], h, cfg, run)
+                x = x + h
+            return x, new_cache
+
+        if state.cross_kv is not None:
+            xs = (params["layers"], state.caches, state.cross_kv)
+        else:
+            xs = (params["layers"], state.caches)
+        x, new_caches = jax.lax.scan(body, x, xs,
+                                     unroll=self.run.scan_unroll)
+        logits = self._logits(params, x)
+        new_state = DecodeState(caches=new_caches, cross_kv=state.cross_kv,
+                                pos=pos + 1)
+        return logits, new_state
+
+    # -- loss ------------------------------------------------------------------------------
+
+    def loss(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        """Masked CE via the fused chunked kernel (no full logits buffer).
+
+        Analysis mode uses the plain full-logits CE so cost_analysis sees
+        the unembedding matmul outside a while-loop."""
+        from .losses import cross_entropy_from_hidden, cross_entropy_reference
+        cfg = self.cfg
+        hidden = self.hidden_states(params, batch)
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        if mask is None:
+            mask = jnp.ones(labels.shape, jnp.float32)
+        head = (params["embed"].T if cfg.tie_embeddings
+                else params["lm_head"])
+        if self.run.analysis_mode:
+            compute = jnp.dtype(self.run.compute_dtype)
+            logits = (hidden.astype(compute) @ head.astype(compute))
+            return cross_entropy_reference(logits, labels, mask)
+        return cross_entropy_from_hidden(
+            hidden, head, labels, mask, jnp.dtype(self.run.compute_dtype))
+
+    def hidden_states(self, params, batch: Dict[str, jax.Array]) -> jax.Array:
+        """Forward up to the final norm (pre-unembedding), text stream only."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = self._embed(params, tokens)
+        prefix_len = 0
+        if cfg.family == "vlm":
+            compute = jnp.dtype(self.run.compute_dtype)
+            patches = batch["patch_embeds"].astype(compute)
+            patches = patches @ params["patch_proj"].astype(compute)
+            x = jnp.concatenate([patches, x], axis=1)
+            prefix_len = cfg.num_patches
+        if cfg.enc_layers:
+            enc_x = self._encode(params, batch["frame_embeds"])
+            x = self._scan_groups_encdec(params, x, enc_x)
+        else:
+            x = self._scan_groups(params, x, prefix_len=prefix_len)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        if cfg.family == "vlm":
+            x = x[:, prefix_len:]
+        return x

@@ -1,0 +1,131 @@
+"""Token-choice top-k Mixture of Experts with sort-based grouped dispatch.
+
+Dispatch is GShard-style but *sort-based* (no (tokens, E, C) one-hot): tokens
+are grouped (group = one batch row for training/prefill, the whole batch for
+decode), each group's (token, expert) assignments are sorted by expert id,
+positions within an expert come from a running count, overflow beyond the
+group capacity is dropped, and tokens are scattered into an (E, C, d) buffer
+for the expert einsums.  The expert dimension carries the ``experts`` logical
+axis -> expert parallelism over the mesh's ``model`` axis; the scatter/gather
+pair lowers to the all-to-alls expert parallelism needs.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, MoEConfig, RunConfig
+from .common import activate
+from .params import ParamDef
+
+
+def moe_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    m = cfg.moe
+    d, f, e = cfg.d_model, m.d_ff_expert, m.num_experts
+    return {
+        "router": ParamDef((d, e), ("embed", "experts"), fan_in=d),
+        "w_gate": ParamDef((e, d, f), ("experts", "embed", "mlp"), fan_in=d),
+        "w_in": ParamDef((e, d, f), ("experts", "embed", "mlp"), fan_in=d),
+        "w_out": ParamDef((e, f, d), ("experts", "mlp", "embed"),
+                          fan_in=f, scale=1.0 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+def group_capacity(tokens_per_group: int, m: MoEConfig) -> int:
+    cap = int(math.ceil(tokens_per_group * m.top_k * m.capacity_factor
+                        / m.num_experts))
+    return max(cap, 1)
+
+
+def _dispatch_one_group(x, logits, m: MoEConfig, capacity: int):
+    """x: (T, d); logits: (T, E). Returns (buffer (E*C, d), combine info)."""
+    T = x.shape[0]
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, m.top_k)     # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)               # renormalize
+    flat_expert = expert_ids.reshape(-1)                       # (T*k,)
+    flat_gate = gate_vals.reshape(-1)
+    flat_token = jnp.repeat(jnp.arange(T), m.top_k)
+    order = jnp.argsort(flat_expert, stable=True)
+    e_sorted = flat_expert[order]
+    t_sorted = flat_token[order]
+    g_sorted = flat_gate[order]
+    counts = jnp.bincount(flat_expert, length=m.num_experts)
+    starts = jnp.cumsum(counts) - counts                       # (E,)
+    pos_in_expert = jnp.arange(T * m.top_k) - starts[e_sorted]
+    keep = pos_in_expert < capacity
+    dest = jnp.where(keep, e_sorted * capacity + pos_in_expert,
+                     m.num_experts * capacity)                 # drop slot
+    buffer = jnp.zeros((m.num_experts * capacity, x.shape[1]), x.dtype)
+    buffer = buffer.at[dest].set(x[t_sorted], mode="drop")
+    return buffer, (t_sorted, g_sorted, dest, keep)
+
+
+def _combine_one_group(expert_out, info, T: int):
+    t_sorted, g_sorted, dest, keep = info
+    gathered = expert_out.at[dest].get(mode="fill", fill_value=0.0)
+    weighted = gathered * (g_sorted * keep).astype(expert_out.dtype)[:, None]
+    out = jnp.zeros((T, expert_out.shape[-1]), expert_out.dtype)
+    return out.at[t_sorted].add(weighted)
+
+
+def moe_apply(params, x, cfg: ModelConfig, run: RunConfig):
+    """x: (B, S, d) — each batch row is a dispatch group (B>1), or the whole
+    batch forms one group (decode, S==1)."""
+    m = cfg.moe
+    compute = jnp.dtype(run.compute_dtype)
+    B, S, d = x.shape
+    if S == 1:  # decode: all tokens in one group
+        groups = x.reshape(1, B, d)
+    else:
+        groups = x
+    G, T, _ = groups.shape
+    capacity = group_capacity(T, m)
+
+    xc = groups.astype(compute)
+    logits = jnp.einsum("gtd,de->gte", xc, params["router"].astype(compute))
+
+    buffers, infos = jax.vmap(
+        lambda xg, lg: _dispatch_one_group(xg, lg, m, capacity))(xc, logits)
+    buf = buffers[:, :m.num_experts * capacity, :].reshape(
+        G, m.num_experts, capacity, d)
+
+    wg = params["w_gate"].astype(compute)
+    wi = params["w_in"].astype(compute)
+    wo = params["w_out"].astype(compute)
+    h = activate(jnp.einsum("gecd,edf->gecf", buf, wg), cfg.act) \
+        * jnp.einsum("gecd,edf->gecf", buf, wi)
+    expert_out = jnp.einsum("gecf,efd->gecd", h, wo)
+    expert_flat = expert_out.reshape(G, m.num_experts * capacity, d)
+
+    out = jax.vmap(lambda eo, info: _combine_one_group(eo, info, T))(
+        expert_flat, infos)
+    return out.reshape(B, S, d).astype(x.dtype)
+
+
+def moe_apply_dense_oracle(params, x, cfg: ModelConfig, run: RunConfig):
+    """Reference: every token through its top-k experts, no capacity drop.
+
+    Used by tests to validate the sort-based dispatch (with ample capacity
+    they must agree exactly)."""
+    m = cfg.moe
+    compute = jnp.dtype(run.compute_dtype)
+    B, S, d = x.shape
+    xc = x.astype(compute).reshape(-1, d)
+    logits = xc @ params["router"].astype(compute)
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, m.top_k)
+    gate_vals = gate_vals / jnp.maximum(gate_vals.sum(-1, keepdims=True), 1e-9)
+    # every expert on every token, then mask
+    h = activate(jnp.einsum("td,edf->tef", xc, params["w_gate"].astype(compute)),
+                 cfg.act) * jnp.einsum("td,edf->tef", xc,
+                                       params["w_in"].astype(compute))
+    all_out = jnp.einsum("tef,efd->ted", h, params["w_out"].astype(compute))
+    mask = jax.nn.one_hot(expert_ids, m.num_experts, dtype=jnp.float32)
+    weights = (gate_vals[..., None] * mask).sum(1)             # (T, E)
+    out = jnp.einsum("ted,te->td", all_out.astype(jnp.float32), weights)
+    return out.reshape(B, S, d).astype(x.dtype)

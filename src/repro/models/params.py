@@ -1,0 +1,77 @@
+"""Parameter definition trees: one source of truth for init, shapes, sharding.
+
+A model is described by a pytree of :class:`ParamDef` leaves.  From the same
+tree we derive (a) materialized parameters for CPU-scale runs, (b)
+``ShapeDtypeStruct`` stand-ins for the multi-pod dry-run (never allocated),
+and (c) logical-axis tuples consumed by ``repro.parallel.sharding``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: Tuple[int, ...]
+    axes: Tuple[Optional[str], ...]      # logical axis names, len == ndim
+    init: str = "normal"                 # normal | zeros | ones
+    scale: float = 1.0                   # stddev multiplier for "normal"
+    fan_in: Optional[int] = None         # if set, stddev = scale / sqrt(fan_in)
+
+    def __post_init__(self) -> None:
+        if len(self.shape) != len(self.axes):
+            raise ValueError(f"shape {self.shape} vs axes {self.axes}")
+
+
+def is_def(x: Any) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def _std(d: ParamDef) -> float:
+    if d.fan_in:
+        return d.scale / np.sqrt(d.fan_in)
+    return d.scale
+
+
+def init_tree(tree, key: jax.Array, dtype=jnp.float32):
+    leaves, treedef = jax.tree_util.tree_flatten(tree, is_leaf=is_def)
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for d, k in zip(leaves, keys):
+        if d.init == "zeros":
+            out.append(jnp.zeros(d.shape, dtype))
+        elif d.init == "ones":
+            out.append(jnp.ones(d.shape, dtype))
+        else:
+            out.append((jax.random.normal(k, d.shape, dtype)
+                        * jnp.asarray(_std(d), dtype)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def shape_tree(tree, dtype=jnp.float32):
+    """ShapeDtypeStruct stand-ins — used by the dry-run, no allocation."""
+    return jax.tree_util.tree_map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, dtype), tree, is_leaf=is_def)
+
+
+def axes_tree(tree):
+    return jax.tree_util.tree_map(lambda d: d.axes, tree, is_leaf=is_def)
+
+
+def stack(tree, n: int, axis_name: Optional[str] = "layers"):
+    """Prepend a stacking dimension (for scan-over-layers)."""
+    def _stack(d: ParamDef) -> ParamDef:
+        return dataclasses.replace(d, shape=(n,) + d.shape,
+                                   axes=(axis_name,) + d.axes)
+    return jax.tree_util.tree_map(_stack, tree, is_leaf=is_def)
+
+
+def count_params(tree) -> int:
+    leaves = jax.tree_util.tree_leaves(tree, is_leaf=is_def)
+    return int(sum(np.prod(d.shape) for d in leaves))

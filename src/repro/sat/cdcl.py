@@ -1,0 +1,291 @@
+"""A self-contained CDCL SAT solver (watched literals, 1-UIP, VSIDS, Luby).
+
+This is the framework's Z3-independent backend: the production mapper uses
+Z3 (as the paper does), but a deployable toolchain cannot hard-require a
+system solver, and a second engine lets tests cross-check satisfiability
+results on the same CNF.  Pure Python; tuned for the 10^3..10^5-clause
+instances the KMS encoding produces at edge-CGRA sizes.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from .cnf import CNF
+
+SAT = "sat"
+UNSAT = "unsat"
+UNKNOWN = "unknown"
+
+
+def luby(i: int) -> int:
+    """Luby restart sequence (1,1,2,1,1,2,4,...)."""
+    k = 1
+    while (1 << (k + 1)) - 1 <= i:
+        k += 1
+    while (1 << k) - 1 != i + 1:
+        i = i - (1 << (k - 1)) + 1
+        k = 1
+        while (1 << (k + 1)) - 1 <= i:
+            k += 1
+    return 1 << (k - 1)
+
+
+@dataclass
+class Stats:
+    decisions: int = 0
+    propagations: int = 0
+    conflicts: int = 0
+    restarts: int = 0
+    learned: int = 0
+    time_s: float = 0.0
+
+
+class CDCLSolver:
+    """Conflict-driven clause learning over a fixed CNF."""
+
+    def __init__(self, cnf: CNF, seed: int = 0):
+        self.nvars = cnf.num_vars
+        self.clauses: List[List[int]] = [list(c) for c in cnf.clauses]
+        self.stats = Stats()
+        # assignment: 0 unassigned, +1 true, -1 false (indexed by var)
+        self.assign = [0] * (self.nvars + 1)
+        self.level = [0] * (self.nvars + 1)
+        self.reason: List[Optional[List[int]]] = [None] * (self.nvars + 1)
+        self.trail: List[int] = []
+        self.trail_lim: List[int] = []
+        self.qhead = 0
+        # watches: lit -> list of clauses watching lit
+        self.watches: Dict[int, List[List[int]]] = {}
+        self.activity = [0.0] * (self.nvars + 1)
+        self.var_inc = 1.0
+        self.var_decay = 0.95
+        self.order: List[int] = list(range(1, self.nvars + 1))
+        self._ok = True
+        self._init_watches()
+
+    # -- setup ---------------------------------------------------------------
+
+    def _init_watches(self) -> None:
+        units: List[int] = []
+        for clause in self.clauses:
+            # de-dup and tautology check
+            s = set(clause)
+            if any(-l in s for l in s):
+                continue
+            clause[:] = list(s)
+            if len(clause) == 0:
+                self._ok = False
+                return
+            if len(clause) == 1:
+                units.append(clause[0])
+                continue
+            self._watch(clause)
+        for u in units:
+            if self.assign[abs(u)] == 0:
+                self._enqueue(u, None)
+            elif self._value(u) < 0:
+                self._ok = False
+                return
+
+    def _watch(self, clause: List[int]) -> None:
+        self.watches.setdefault(clause[0], []).append(clause)
+        self.watches.setdefault(clause[1], []).append(clause)
+
+    # -- basic ops -----------------------------------------------------------
+
+    def _value(self, lit: int) -> int:
+        v = self.assign[abs(lit)]
+        return v if lit > 0 else -v
+
+    def _enqueue(self, lit: int, reason: Optional[List[int]]) -> None:
+        v = abs(lit)
+        self.assign[v] = 1 if lit > 0 else -1
+        self.level[v] = len(self.trail_lim)
+        self.reason[v] = reason
+        self.trail.append(lit)
+
+    def _propagate(self) -> Optional[List[int]]:
+        """Unit propagation; returns a conflicting clause or None."""
+        while self.qhead < len(self.trail):
+            lit = self.trail[self.qhead]
+            self.qhead += 1
+            self.stats.propagations += 1
+            neg = -lit
+            watchlist = self.watches.get(neg)
+            if not watchlist:
+                continue
+            new_list: List[List[int]] = []
+            i = 0
+            n = len(watchlist)
+            conflict: Optional[List[int]] = None
+            while i < n:
+                clause = watchlist[i]
+                i += 1
+                # ensure clause[1] == neg
+                if clause[0] == neg:
+                    clause[0], clause[1] = clause[1], clause[0]
+                first = clause[0]
+                if self._value(first) > 0:
+                    new_list.append(clause)
+                    continue
+                # search replacement watch
+                found = False
+                for j in range(2, len(clause)):
+                    if self._value(clause[j]) >= 0:
+                        clause[1], clause[j] = clause[j], clause[1]
+                        self.watches.setdefault(clause[1], []).append(clause)
+                        found = True
+                        break
+                if found:
+                    continue
+                new_list.append(clause)
+                if self._value(first) < 0:
+                    # conflict: keep remaining watches, bail out
+                    new_list.extend(watchlist[i:])
+                    conflict = clause
+                    break
+                self._enqueue(first, clause)
+            self.watches[neg] = new_list
+            if conflict is not None:
+                return conflict
+        return None
+
+    # -- conflict analysis ----------------------------------------------------
+
+    def _bump(self, v: int) -> None:
+        self.activity[v] += self.var_inc
+        if self.activity[v] > 1e100:
+            for i in range(1, self.nvars + 1):
+                self.activity[i] *= 1e-100
+            self.var_inc *= 1e-100
+
+    def _analyze(self, conflict: List[int]) -> Tuple[List[int], int]:
+        """1-UIP learning. Returns (learned clause, backtrack level)."""
+        learnt: List[int] = [0]  # placeholder for the asserting literal
+        seen = [False] * (self.nvars + 1)
+        path_count = 0
+        pivot_var = 0  # variable resolved away this step (0 = none yet)
+        reason: Sequence[int] = conflict
+        idx = len(self.trail) - 1
+        cur_level = len(self.trail_lim)
+        while True:
+            for q in reason:
+                v = abs(q)
+                if v == pivot_var:
+                    continue  # the literal being resolved on
+                if not seen[v] and self.level[v] > 0:
+                    seen[v] = True
+                    self._bump(v)
+                    if self.level[v] >= cur_level:
+                        path_count += 1
+                    else:
+                        learnt.append(q)
+            # pick next literal from trail
+            while not seen[abs(self.trail[idx])]:
+                idx -= 1
+            p = self.trail[idx]
+            pivot_var = abs(p)
+            seen[pivot_var] = False
+            path_count -= 1
+            idx -= 1
+            if path_count == 0:
+                learnt[0] = -p
+                break
+            reason = self.reason[pivot_var] or ()
+        if len(learnt) == 1:
+            return learnt, 0
+        # backtrack to second-highest level in the clause
+        bt = max(self.level[abs(q)] for q in learnt[1:])
+        # move a literal of level bt to position 1 (watch invariant)
+        for i in range(1, len(learnt)):
+            if self.level[abs(learnt[i])] == bt:
+                learnt[1], learnt[i] = learnt[i], learnt[1]
+                break
+        return learnt, bt
+
+    def _backtrack(self, level: int) -> None:
+        if len(self.trail_lim) <= level:
+            return
+        limit = self.trail_lim[level]
+        for lit in self.trail[limit:]:
+            v = abs(lit)
+            self.assign[v] = 0
+            self.reason[v] = None
+        del self.trail[limit:]
+        del self.trail_lim[level:]
+        self.qhead = min(self.qhead, len(self.trail))
+
+    def _decide(self) -> int:
+        best, besta = 0, -1.0
+        for v in self.order:
+            if self.assign[v] == 0 and self.activity[v] > besta:
+                best, besta = v, self.activity[v]
+        return best
+
+    # -- main loop -------------------------------------------------------------
+
+    def solve(self, timeout_s: Optional[float] = None,
+              max_conflicts: Optional[int] = None) -> str:
+        t0 = time.monotonic()
+        if not self._ok:
+            return UNSAT
+        conflict = self._propagate()
+        if conflict is not None:
+            return UNSAT
+        restart_idx = 0
+        conflicts_until_restart = 100 * luby(0)
+        while True:
+            if timeout_s is not None and time.monotonic() - t0 > timeout_s:
+                self.stats.time_s = time.monotonic() - t0
+                return UNKNOWN
+            if max_conflicts is not None and self.stats.conflicts > max_conflicts:
+                self.stats.time_s = time.monotonic() - t0
+                return UNKNOWN
+            v = self._decide()
+            if v == 0:
+                self.stats.time_s = time.monotonic() - t0
+                return SAT
+            self.stats.decisions += 1
+            self.trail_lim.append(len(self.trail))
+            # phase saving could go here; default polarity: positive
+            self._enqueue(v, None)
+            while True:
+                conflict = self._propagate()
+                if conflict is None:
+                    break
+                self.stats.conflicts += 1
+                conflicts_until_restart -= 1
+                if len(self.trail_lim) == 0:
+                    self.stats.time_s = time.monotonic() - t0
+                    return UNSAT
+                learnt, bt = self._analyze(conflict)
+                self._backtrack(bt)
+                self.stats.learned += 1
+                if len(learnt) == 1:
+                    if self._value(learnt[0]) < 0:
+                        return UNSAT
+                    if self.assign[abs(learnt[0])] == 0:
+                        self._enqueue(learnt[0], None)
+                else:
+                    self.clauses.append(learnt)
+                    self._watch(learnt)
+                    self._enqueue(learnt[0], learnt)
+                self.var_inc /= self.var_decay
+                if conflicts_until_restart <= 0:
+                    restart_idx += 1
+                    self.stats.restarts += 1
+                    conflicts_until_restart = 100 * luby(restart_idx)
+                    self._backtrack(0)
+                    break
+
+    def model(self) -> Dict[int, bool]:
+        return {v: self.assign[v] > 0 for v in range(1, self.nvars + 1)}
+
+
+def solve_cnf(cnf: CNF, timeout_s: Optional[float] = None,
+              seed: int = 0) -> Tuple[str, Optional[Dict[int, bool]], Stats]:
+    solver = CDCLSolver(cnf, seed=seed)
+    res = solver.solve(timeout_s=timeout_s)
+    return res, solver.model() if res == SAT else None, solver.stats

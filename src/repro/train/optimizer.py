@@ -1,0 +1,90 @@
+"""AdamW with WSD / cosine schedules, gradient clipping, decoupled decay.
+
+Self-contained (no optax offline).  The WSD (warmup-stable-decay) schedule is
+wired for the architectures whose source requires it (minicpm-2b).
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Dict, NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, RunConfig
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+def make_schedule(run: RunConfig, cfg: ModelConfig) -> Callable[[jax.Array], jax.Array]:
+    base = run.learning_rate
+    warm = max(run.warmup_steps, 1)
+    total = max(run.decay_steps, warm + 1)
+
+    if cfg.schedule == "wsd":
+        # warmup -> stable plateau -> 1-sqrt decay over the last 10%
+        decay_start = int(total * 0.9)
+
+        def wsd(step):
+            step = step.astype(jnp.float32)
+            warmup = base * jnp.minimum(step / warm, 1.0)
+            frac = jnp.clip((step - decay_start) / max(total - decay_start, 1),
+                            0.0, 1.0)
+            decay = base * (1.0 - jnp.sqrt(frac))
+            return jnp.where(step < decay_start, warmup, decay)
+
+        return wsd
+
+    def cosine(step):
+        step = step.astype(jnp.float32)
+        warmup = base * jnp.minimum(step / warm, 1.0)
+        frac = jnp.clip((step - warm) / max(total - warm, 1), 0.0, 1.0)
+        cos = 0.1 * base + 0.9 * base * 0.5 * (1 + jnp.cos(jnp.pi * frac))
+        return jnp.where(step < warm, warmup, cos)
+
+    return cosine
+
+
+def init_opt_state(params) -> OptState:
+    zeros = jax.tree_util.tree_map(jnp.zeros_like, params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=zeros,
+                    v=jax.tree_util.tree_map(jnp.zeros_like, params))
+
+
+def opt_state_specs(param_specs) -> OptState:
+    """ShapeDtypeStruct tree for the dry-run."""
+    return OptState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                    m=param_specs, v=param_specs)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def adamw_update(grads, opt: OptState, params, run: RunConfig,
+                 schedule, b1=0.9, b2=0.95, eps=1e-8
+                 ) -> Tuple[Any, OptState, Dict[str, jax.Array]]:
+    step = opt.step + 1
+    lr = schedule(step)
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, run.grad_clip / jnp.maximum(gnorm, 1e-9))
+    grads = jax.tree_util.tree_map(lambda g: g * clip, grads)
+    m = jax.tree_util.tree_map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                               opt.m, grads)
+    v = jax.tree_util.tree_map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                               opt.v, grads)
+    bc1 = 1 - b1 ** step.astype(jnp.float32)
+    bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, m_, v_):
+        update = (m_ / bc1) / (jnp.sqrt(v_ / bc2) + eps)
+        return (p - lr * (update + run.weight_decay * p)).astype(p.dtype)
+
+    new_params = jax.tree_util.tree_map(upd, params, m, v)
+    metrics = {"lr": lr, "grad_norm": gnorm}
+    return new_params, OptState(step=step, m=m, v=v), metrics

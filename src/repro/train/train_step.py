@@ -1,0 +1,68 @@
+"""Train-step factory: loss -> grads -> AdamW, with microbatched gradient
+accumulation and optional int8 error-feedback gradient compression."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from ..configs.base import ModelConfig, RunConfig
+from ..models.model import Model
+from ..parallel.collectives import compress_decompress
+from .optimizer import OptState, adamw_update, make_schedule
+
+
+def make_train_step(model: Model) -> Callable:
+    """Returns train_step(params, opt, batch) -> (params, opt, metrics).
+
+    With ``run.microbatches > 1`` the global batch is split on the leading
+    axis and gradients are accumulated in a ``lax.scan`` — this is also the
+    compute/communication-overlap lever: per-microbatch backward compute
+    overlaps the previous microbatch's gradient reduce-scatter under XLA's
+    latency-hiding scheduler.
+    """
+    run = model.run
+    schedule = make_schedule(run, model.cfg)
+
+    def loss_fn(params, batch):
+        return model.loss(params, batch)
+
+    def compute_grads(params, batch):
+        n_micro = run.microbatches
+        if n_micro <= 1:
+            return jax.value_and_grad(loss_fn)(params, batch)
+
+        def reshape(x):
+            b = x.shape[0]
+            return x.reshape((n_micro, b // n_micro) + x.shape[1:])
+
+        micro = jax.tree_util.tree_map(reshape, batch)
+
+        def body(carry, mb):
+            loss_acc, grad_acc = carry
+            loss, grads = jax.value_and_grad(loss_fn)(params, mb)
+            grad_acc = jax.tree_util.tree_map(jnp.add, grad_acc, grads)
+            return (loss_acc + loss, grad_acc), None
+
+        zeros = jax.tree_util.tree_map(
+            lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        (loss_sum, grad_sum), _ = jax.lax.scan(
+            body, (jnp.zeros((), jnp.float32), zeros), micro)
+        scale = 1.0 / n_micro
+        grads = jax.tree_util.tree_map(lambda g: g * scale, grad_sum)
+        return loss_sum * scale, grads
+
+    def train_step(params, opt: OptState, batch: Dict[str, jax.Array]):
+        loss, grads = compute_grads(params, batch)
+        if run.grad_compression:
+            # int8 quantize/dequantize models the compressed DP all-reduce
+            # (see repro.parallel.collectives for the shard_map collective)
+            grads = jax.tree_util.tree_map(compress_decompress, grads)
+        new_params, new_opt, metrics = adamw_update(
+            grads, opt, params, run, schedule)
+        metrics["loss"] = loss
+        return new_params, new_opt, metrics
+
+    return train_step

@@ -1,0 +1,101 @@
+"""End-to-end: C-level CIL -> SAT mapping -> bitstream -> JAX CGRA execution.
+
+For each paper benchmark: map on 2x2..4x4 toruses, assemble, simulate, and
+compare every node's last-iteration value + the final data memory against
+the pure-Python oracle.
+"""
+import numpy as np
+import pytest
+
+from repro.cgra import make_grid
+from repro.cgra.programs import BENCHMARKS, synthetic_dfg, TABLE3
+from repro.cgra.simulator import map_for_execution, simulate, verify
+from repro.core import MapperConfig, map_dfg, min_ii, validate_mapping
+
+CFG = MapperConfig(per_ii_timeout_s=90, ii_max=30)
+
+
+def make_mem(name: str, seed: int = 0) -> np.ndarray:
+    rng = np.random.RandomState(seed)
+    mem = np.zeros(128, np.int32)
+    if name == "stringsearch":
+        mem[0:16] = rng.randint(0, 8, 16)     # small alphabet -> real matches
+        mem[32:48] = rng.randint(0, 8, 16)
+        mem[48:64] = rng.randint(0, 8, 16)
+    elif name == "gsm":
+        mem[0:16] = rng.randint(-2**14, 2**14, 16)
+        mem[32:48] = rng.randint(-2**14, 2**14, 16)
+    else:
+        mem[0:32] = rng.randint(0, 2**30, 32)
+    return mem
+
+
+@pytest.mark.parametrize("name", sorted(BENCHMARKS))
+@pytest.mark.parametrize("size", [2, 3])
+def test_benchmark_end_to_end(name, size):
+    prog = BENCHMARKS[name]()
+    grid = make_grid(size, size)
+    res = map_for_execution(prog, grid, CFG)
+    if res.mapping is None:
+        pytest.skip(f"{name} unmapped on {size}x{size} within budget "
+                    f"({res.status})")
+    assert validate_mapping(res.mapping) == []
+    errs = verify(prog, res.mapping, make_mem(name))
+    assert errs == [], errs[:5]
+
+
+def test_batch_execution_parallel_inputs():
+    """The simulator vectorizes over independent input sets (vmap batch)."""
+    prog = BENCHMARKS["gsm"]()
+    grid = make_grid(3, 3)
+    res = map_for_execution(prog, grid, CFG)
+    assert res.mapping is not None
+    B = 4
+    mems = np.stack([make_mem("gsm", seed=s) for s in range(B)])
+    sim = simulate(prog, res.mapping, mems, batch=B)
+    for b in range(B):
+        oracle = prog.run_oracle([int(v) for v in mems[b]])
+        node = prog.result_nodes["acc"]
+        assert int(sim.node_values[node][b]) == oracle["acc"]
+
+
+def test_heuristic_mapping_also_executes():
+    """Baseline mappings run through the same bitstream + simulator.
+
+    Routing nodes (MOV) inserted by the heuristic are not connected to the
+    program source table, so restrict to a benchmark mapped without routing.
+    """
+    from repro.core import HeuristicConfig, map_dfg_heuristic
+    prog = BENCHMARKS["bitcount"]()
+    dfg = prog.build_dfg()
+    grid = make_grid(3, 3)
+    res = map_dfg_heuristic(dfg, grid, HeuristicConfig(seed=1))
+    if res.mapping is None or res.mapping.routing_nodes:
+        pytest.skip("no routing-free heuristic mapping found")
+    errs = verify(prog, res.mapping, make_mem("bitcount"))
+    assert errs == []
+
+
+def test_kernel_rows_match_unrolled_steady_state():
+    """Compact kernel bitstream == the steady-state window of the unrolled
+    grid, tiled with period II (prologue/kernel/epilogue structure)."""
+    from repro.cgra.bitstream import assemble
+    prog = BENCHMARKS["sha"](trip=12)
+    grid = make_grid(3, 3)
+    res = map_for_execution(prog, grid, CFG)
+    assert res.mapping is not None
+    asm = assemble(prog, res.mapping)
+    assert len(asm.kernel) == asm.ii
+    start = len(asm.prologue)
+    for rep in range(2):
+        for r in range(asm.ii):
+            row = asm.rows[start + rep * asm.ii + r]
+            assert row == asm.kernel[r], f"kernel row {r} rep {rep}"
+
+
+@pytest.mark.parametrize("name", ["hotspot", "patricia"])
+def test_synthetic_table3_counts(name):
+    d = synthetic_dfg(name)
+    assert (d.num_nodes, d.num_edges) == TABLE3[name]
+    # solvable structure: mII must be finite and KMS constructible
+    assert min_ii(d, 16) >= 1

@@ -1,0 +1,232 @@
+"""Property-based tests over the solver core's invariants."""
+import random
+
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.cgra import make_grid
+from repro.core import (DFG, Edge, HeuristicConfig, MapperConfig, Node,
+                        asap_alap, fold_kms, map_dfg, map_dfg_heuristic,
+                        min_ii, rec_ii, res_ii, validate_mapping)
+from repro.core.backends import encoding_to_cnf, solve_cdcl, solve_z3
+from repro.core.sat_encoding import KMSEncoding
+from repro.sat import CDCLSolver, CNF
+
+def SETTINGS(max_examples=25):
+    return dict(deadline=None, max_examples=max_examples,
+                suppress_health_check=[HealthCheck.too_slow])
+
+
+# ---------------------------------------------------------------------------
+# random DFG generator
+# ---------------------------------------------------------------------------
+
+
+def random_dfg(seed: int, max_nodes: int = 12) -> DFG:
+    rng = random.Random(seed)
+    n = rng.randint(2, max_nodes)
+    nodes = [Node(i) for i in range(1, n + 1)]
+    edges = []
+    seen = set()
+    # forward edges respect id order -> forward subgraph is a DAG
+    for dst in range(2, n + 1):
+        for _ in range(rng.randint(0, 2)):
+            src = rng.randint(1, dst - 1)
+            if (src, dst) not in seen:
+                seen.add((src, dst))
+                edges.append(Edge(src, dst, 0))
+    # a few back-edges with distance 1..2
+    for _ in range(rng.randint(0, 2)):
+        src = rng.randint(2, n)
+        dst = rng.randint(1, src)
+        if src != dst and (src, dst) not in seen:
+            seen.add((src, dst))
+            edges.append(Edge(src, dst, rng.randint(1, 2)))
+    return DFG(nodes, edges, name=f"rand{seed}")
+
+
+# ---------------------------------------------------------------------------
+# schedule / KMS invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 10_000))
+@settings(**SETTINGS())
+def test_kms_partition_property(seed):
+    """Every node's KMS slots = its mobility window, bijectively."""
+    dfg = random_dfg(seed)
+    ms = asap_alap(dfg)
+    for ii in range(1, ms.length + 2):
+        kms = fold_kms(ms, ii)
+        for n in dfg.node_ids():
+            window = list(ms.mobility(n))
+            slots = kms.slots[n]
+            assert len(slots) == len(window)
+            # schedule_time reverses the fold: q - pad == MS row
+            recovered = sorted(kms.schedule_time(s) - kms.pad for s in slots)
+            assert recovered == window
+            for s in slots:
+                assert 0 <= s.c < ii
+                assert 0 <= s.it < kms.num_folds
+
+
+@given(st.integers(0, 10_000))
+@settings(**SETTINGS())
+def test_asap_alap_sound(seed):
+    dfg = random_dfg(seed)
+    ms = asap_alap(dfg)
+    for n in dfg.node_ids():
+        assert 0 <= ms.asap[n] <= ms.alap[n] < ms.length
+    for e in dfg.forward_edges():
+        assert ms.asap[e.src] < ms.asap[e.dst]
+        assert ms.alap[e.src] < ms.alap[e.dst]
+
+
+@given(st.integers(0, 10_000))
+@settings(**SETTINGS())
+def test_mii_lower_bound_is_sound(seed):
+    """No mapping can exist below mII: the SAT instance must be UNSAT there.
+
+    (Checks the encoder agrees with the analytic bound — the paper's
+    Eq. 2 soundness.)"""
+    dfg = random_dfg(seed, max_nodes=8)
+    grid = make_grid(2, 2)
+    mii = min_ii(dfg, grid.num_pes)
+    assert mii >= res_ii(dfg, 4)
+    assert mii >= rec_ii(dfg)
+    if mii > 1:
+        ms = asap_alap(dfg)
+        kms = fold_kms(ms, mii - 1)
+        enc = KMSEncoding(dfg, kms, grid)
+        status, _, _ = solve_z3(enc, timeout_s=20)
+        assert status == "unsat"
+
+
+# ---------------------------------------------------------------------------
+# mapper end-to-end invariants
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 10_000))
+@settings(**SETTINGS(15))
+def test_mapper_output_always_validates(seed):
+    dfg = random_dfg(seed, max_nodes=10)
+    grid = make_grid(2, 2)
+    res = map_dfg(dfg, grid, MapperConfig(per_ii_timeout_s=20, ii_max=12,
+                                          validate=False))
+    if res.mapping is not None:
+        assert validate_mapping(res.mapping) == []
+        assert res.mapping.ii >= res.mii
+
+
+@given(st.integers(0, 10_000))
+@settings(**SETTINGS(10))
+def test_sat_never_worse_than_heuristic(seed):
+    """Exactness: on instances both solve, SAT-MapIt's II <= heuristic II."""
+    dfg = random_dfg(seed, max_nodes=9)
+    grid = make_grid(2, 2)
+    sat_res = map_dfg(dfg, grid, MapperConfig(per_ii_timeout_s=20, ii_max=12))
+    heur = map_dfg_heuristic(dfg, grid, HeuristicConfig(
+        seed=seed, tries_per_ii=6, ii_max=12))
+    if sat_res.mapping and heur.mapping:
+        assert sat_res.mapping.ii <= heur.mapping.ii
+    if heur.mapping:
+        # heuristic results must be legal under the same validator
+        assert validate_mapping(heur.mapping) == []
+
+
+@given(st.integers(0, 10_000))
+@settings(**SETTINGS(8))
+def test_backends_agree(seed):
+    """Z3 and our CDCL agree on satisfiability of the same encoding."""
+    dfg = random_dfg(seed, max_nodes=7)
+    grid = make_grid(2, 2)
+    ms = asap_alap(dfg)
+    mii = min_ii(dfg, grid.num_pes)
+    for ii in (mii, mii + 1):
+        kms = fold_kms(ms, ii)
+        enc = KMSEncoding(dfg, kms, grid)
+        s1, _, _ = solve_z3(enc, timeout_s=20)
+        s2, _, _ = solve_cdcl(enc, timeout_s=20)
+        assert s1 == s2
+
+
+@given(st.integers(0, 10_000))
+@settings(**SETTINGS(8))
+def test_symmetry_breaking_preserves_satisfiability(seed):
+    """PE pinning on the torus must not change SAT/UNSAT answers."""
+    dfg = random_dfg(seed, max_nodes=7)
+    grid = make_grid(3, 3)
+    ms = asap_alap(dfg)
+    ii = min_ii(dfg, grid.num_pes)
+    kms = fold_kms(ms, ii)
+    plain = KMSEncoding(dfg, kms, grid, symmetry_break=False)
+    broken = KMSEncoding(dfg, kms, grid, symmetry_break=True)
+    s1, _, _ = solve_z3(plain, timeout_s=20)
+    s2, _, _ = solve_z3(broken, timeout_s=20)
+    assert s1 == s2
+
+
+# ---------------------------------------------------------------------------
+# SAT substrate
+# ---------------------------------------------------------------------------
+
+
+@given(st.integers(0, 100_000))
+@settings(**SETTINGS())
+def test_cdcl_vs_bruteforce_random3sat(seed):
+    rng = random.Random(seed)
+    n = rng.randint(3, 10)
+    m = rng.randint(n, 6 * n)
+    cnf = CNF()
+    cnf.ensure_var(n)
+    for _ in range(m):
+        vs = rng.sample(range(1, n + 1), 3)
+        cnf.add_clause(tuple(v if rng.random() < .5 else -v for v in vs))
+    solver = CDCLSolver(cnf)
+    res = solver.solve(timeout_s=10)
+    exp = any(
+        all(any((a >> (abs(l) - 1)) & 1 == (l > 0) for l in c)
+            for c in cnf.clauses)
+        for a in range(1 << n))
+    assert (res == "sat") == exp
+    if res == "sat":
+        model = solver.model()
+        assert all(any(model[abs(l)] == (l > 0) for l in c)
+                   for c in cnf.clauses)
+
+
+@given(st.integers(0, 10_000), st.integers(2, 9))
+@settings(**SETTINGS())
+def test_amo_encodings_equivalent(seed, k):
+    """Pairwise and sequential at-most-one admit exactly the same models
+    (projected to the original variables)."""
+    rng = random.Random(seed)
+    lits = list(range(1, k + 1))
+
+    def count_models(encoding):
+        cnf = CNF()
+        cnf.ensure_var(k)
+        if encoding == "pairwise":
+            cnf.at_most_one_pairwise(lits)
+        else:
+            cnf.at_most_one_sequential(lits)
+        count = 0
+        for a in range(1 << k):
+            assign = {v: bool((a >> (v - 1)) & 1) for v in range(1, k + 1)}
+            # extend to aux vars by brute force over the remainder
+            aux = list(range(k + 1, cnf.num_vars + 1))
+            ok = False
+            for b in range(1 << len(aux)):
+                full = dict(assign)
+                for i, v in enumerate(aux):
+                    full[v] = bool((b >> i) & 1)
+                if all(any(full[abs(l)] == (l > 0) for l in c)
+                       for c in cnf.clauses):
+                    ok = True
+                    break
+            count += ok
+        return count
+
+    if k <= 6:  # brute-force cost guard
+        assert count_models("pairwise") == count_models("sequential")

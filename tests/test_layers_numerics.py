@@ -1,0 +1,159 @@
+"""Numerical contracts of the custom layers: flash-attention custom VJP,
+fused cross-entropy, MoE dispatch vs dense oracle, SSD chunked-vs-decode
+consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+import repro.models.losses as losses
+from repro.configs.base import MoEConfig, ModelConfig, RunConfig, SSMConfig
+from repro.models.attention import _flash, chunked_attention, full_attention
+from repro.models import moe as moe_mod
+from repro.models import ssm as ssm_mod
+from repro.models.params import init_tree
+
+RUN32 = RunConfig(compute_dtype="float32", remat="none")
+
+
+@pytest.mark.parametrize("causal,prefix", [(True, 0), (True, 8), (False, 0)])
+def test_flash_custom_vjp_matches_full_attention(causal, prefix):
+    key = jax.random.PRNGKey(0)
+    B, S, H, KV, hd = 2, 64, 4, 2, 16
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+
+    def f_flash(q, k, v):
+        return (_flash(q, k, v, causal, 16, 0, prefix)
+                * jnp.arange(hd)).sum()
+
+    def f_full(q, k, v):
+        return (full_attention(q, k, v, causal=causal, prefix_len=prefix)
+                * jnp.arange(hd)).sum()
+
+    np.testing.assert_allclose(
+        _flash(q, k, v, causal, 16, 0, prefix),
+        full_attention(q, k, v, causal=causal, prefix_len=prefix),
+        rtol=2e-5, atol=2e-5)
+    g1 = jax.grad(f_flash, (0, 1, 2))(q, k, v)
+    g2 = jax.grad(f_full, (0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(a, b, rtol=3e-4, atol=3e-4)
+
+
+@given(st.integers(0, 1000))
+@settings(deadline=None, max_examples=10,
+          suppress_health_check=[HealthCheck.too_slow])
+def test_fused_ce_property(seed):
+    rng = np.random.RandomState(seed)
+    T = rng.randint(3, 70)
+    d = rng.randint(4, 12)
+    V = rng.randint(5, 50)
+    old_chunk = losses.CHUNK
+    losses.CHUNK = 16
+    try:
+        h = jnp.asarray(rng.randn(T, d), jnp.float32)
+        w = jnp.asarray(rng.randn(d, V) * 0.3, jnp.float32)
+        labels = jnp.asarray(rng.randint(0, V, T))
+        mask = jnp.asarray((rng.rand(T) > 0.3).astype(np.float32))
+
+        def fused(h, w):
+            s, m = losses.fused_cross_entropy(h, w, labels, mask, jnp.float32)
+            return s / jnp.maximum(m, 1.0)
+
+        def ref(h, w):
+            return losses.cross_entropy_reference(
+                (h @ w)[None], labels[None], mask[None])
+
+        np.testing.assert_allclose(fused(h, w), ref(h, w), rtol=2e-5,
+                                   atol=1e-6)
+        g1 = jax.grad(fused, (0, 1))(h, w)
+        g2 = jax.grad(ref, (0, 1))(h, w)
+        np.testing.assert_allclose(g1[0], g2[0], rtol=2e-4, atol=1e-5)
+        np.testing.assert_allclose(g1[1], g2[1], rtol=2e-4, atol=1e-5)
+    finally:
+        losses.CHUNK = old_chunk
+
+
+def _moe_cfg(E=8, k=2, cf=8.0):
+    return ModelConfig(
+        name="t", family="moe", num_layers=2, d_model=16, num_heads=2,
+        num_kv_heads=1, d_ff=32, vocab_size=64, head_dim=8,
+        moe=MoEConfig(num_experts=E, top_k=k, d_ff_expert=16,
+                      capacity_factor=cf))
+
+
+def test_moe_sort_dispatch_matches_dense_oracle():
+    """With ample capacity the sort-based dispatch == dense per-token MoE."""
+    cfg = _moe_cfg(cf=16.0)  # capacity >> needed: no drops
+    params = init_tree(moe_mod.moe_defs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (3, 10, cfg.d_model))
+    got = moe_mod.moe_apply(params, x, cfg, RUN32)
+    exp = moe_mod.moe_apply_dense_oracle(params, x, cfg, RUN32)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(exp),
+                               rtol=2e-4, atol=2e-4)
+
+
+def test_moe_capacity_drops_are_bounded():
+    cfg = _moe_cfg(cf=0.5)  # tight capacity: drops must occur gracefully
+    params = init_tree(moe_mod.moe_defs(cfg), jax.random.PRNGKey(0))
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 32, cfg.d_model))
+    out = moe_mod.moe_apply(params, x, cfg, RUN32)
+    assert bool(jnp.isfinite(out).all())
+    # dropped tokens pass through as zeros (residual handles them)
+    assert float(jnp.abs(out).sum()) > 0
+
+
+def test_ssd_prefill_vs_decode_consistency():
+    """Chunked SSD over a sequence == step-by-step recurrent decode."""
+    cfg = ModelConfig(
+        name="t", family="ssm", num_layers=2, d_model=16, num_heads=0,
+        num_kv_heads=0, d_ff=0, vocab_size=64,
+        ssm=SSMConfig(state_size=8, conv_kernel=4, head_dim=8, expand=2,
+                      chunk=4))
+    params = init_tree(ssm_mod.ssm_defs(cfg), jax.random.PRNGKey(0))
+    B, S = 2, 12
+    x = jax.random.normal(jax.random.PRNGKey(1), (B, S, cfg.d_model)) * 0.3
+    full = ssm_mod.ssm_apply(params, x, cfg, RUN32)
+    state = ssm_mod.init_state(cfg, B)
+    outs = []
+    for t in range(S):
+        y, state = ssm_mod.ssm_decode(params, x[:, t:t + 1], state, cfg,
+                                      RUN32)
+        outs.append(y)
+    step = jnp.concatenate(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(full), np.asarray(step),
+                               rtol=2e-3, atol=2e-3)
+
+
+def test_serve_engine_greedy_matches_forward_argmax():
+    from repro.configs import get_smoke
+    from repro.models import Model
+    from repro.serve.engine import ServeConfig, ServeEngine
+    cfg = get_smoke("llama3.2-3b")
+    model = Model(cfg, RunConfig(remat="none", attn_chunk=64))
+    params = model.init(jax.random.PRNGKey(0))
+    engine = ServeEngine(model, params, ServeConfig(max_len=32))
+    prompts = np.random.RandomState(0).randint(0, cfg.vocab_size,
+                                               size=(2, 6)).astype(np.int32)
+    out = engine.generate(prompts, 1)
+    # oracle: forward over the prompt, argmax of the last position
+    logits = jax.jit(model.forward)(params, {"tokens": jnp.asarray(prompts)})
+    exp = np.asarray(jnp.argmax(logits[:, -1], axis=-1))
+    np.testing.assert_array_equal(out[:, 0], exp)
+
+
+def test_energy_model_monotonicity():
+    """More rows / more loads => more cycles and energy."""
+    from repro.cgra.energy import row_latency
+    from repro.cgra.isa import Instr, NOP
+    nops = [NOP] * 4
+    load_row = [Instr(op="LWI", src_a=10, imm=3)] + [NOP] * 3
+    two_loads_same_col = [Instr(op="LWI", src_a=10, imm=1), NOP,
+                          Instr(op="LWI", src_a=10, imm=2), NOP]
+    assert row_latency(nops, 2) == 1
+    assert row_latency(load_row, 2) == 2
+    assert row_latency(two_loads_same_col, 2) == 3  # column serialization

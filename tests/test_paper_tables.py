@@ -1,0 +1,152 @@
+"""Faithfulness tests: reproduce the paper's own worked example exactly.
+
+Table 1 (ASAP/ALAP/MS), Table 2 (KMS with iteration labels), the mII
+computation of §4.1, and the satisfying assignment printed at the end of
+§4.2 (which must satisfy our constraint system — including the back-edge
+cases where the printed Eq. 18 is inconsistent with the paper's own model).
+"""
+import pytest
+
+from repro.core import (KMSEncoding, MapperConfig, Mapping, Placement,
+                        asap_alap, fold_kms, map_dfg, min_ii, rec_ii, res_ii,
+                        running_example, validate_mapping)
+from repro.core.mapping import separation
+from repro.core.schedule import Slot
+from repro.cgra import make_grid
+
+
+@pytest.fixture(scope="module")
+def dfg():
+    return running_example()
+
+
+@pytest.fixture(scope="module")
+def ms(dfg):
+    return asap_alap(dfg)
+
+
+def test_table1_asap(ms):
+    expected = {0: {1, 2, 3, 4}, 1: {5, 7, 10}, 2: {6, 11}, 3: {8}, 4: {9}}
+    assert ms.length == 5
+    rows = ms.asap_rows()
+    for t, nodes in expected.items():
+        assert rows[t] == nodes, f"ASAP row {t}"
+
+
+def test_table1_alap(ms):
+    expected = {0: {3}, 1: {4, 5}, 2: {1, 6, 7}, 3: {2, 8, 10}, 4: {9, 11}}
+    rows = ms.alap_rows()
+    for t, nodes in expected.items():
+        assert rows[t] == nodes, f"ALAP row {t}"
+
+
+def test_table1_mobility(ms):
+    expected = {0: {1, 2, 3, 4}, 1: {1, 2, 4, 5, 7, 10},
+                2: {1, 2, 6, 7, 10, 11}, 3: {2, 8, 10, 11}, 4: {9, 11}}
+    rows = ms.rows()
+    for t, nodes in expected.items():
+        assert rows[t] == nodes, f"MS row {t}"
+
+
+def test_table2_kms(ms):
+    """Table 2: II=3 folds the MS twice; blue = iteration 0 (deep rows),
+    green = iteration 1 (shallow rows)."""
+    kms = fold_kms(ms, 3)
+    assert kms.num_folds == 2
+    assert kms.pad == 1
+    expected = {
+        (0, 0): {1, 2, 6, 7, 10, 11},
+        (1, 0): {2, 8, 10, 11},
+        (1, 1): {1, 2, 3, 4},
+        (2, 0): {9, 11},
+        (2, 1): {1, 2, 4, 5, 7, 10},
+    }
+    for (c, it), nodes in expected.items():
+        assert kms.rows[c].get(it, set()) == nodes, f"KMS row {c} it {it}"
+    # no other populated (row, it) cells
+    populated = {(c, it) for c in range(3) for it in kms.rows[c]
+                 if kms.rows[c][it]}
+    assert populated == set(expected)
+
+
+def test_mii_example(dfg):
+    """§4.1: ResII = ceil(11/4) = 3, RecII = 2, mII = 3."""
+    grid = make_grid(2, 2)
+    assert res_ii(dfg, grid.num_pes) == 3
+    assert rec_ii(dfg) == 2
+    assert min_ii(dfg, grid.num_pes) == 3
+
+
+def test_literal_set_example(dfg, ms):
+    """Eq. 3: node 3 appears only at KMS (c=1, it=1) and on any of 4 PEs."""
+    kms = fold_kms(ms, 3)
+    grid = make_grid(2, 2)
+    enc = KMSEncoding(dfg, kms, grid)
+    lits = enc.node_lits[3]
+    assert len(lits) == 4
+    metas = [enc.meta_of[l] for l in lits]
+    assert all(m.slot == Slot(c=1, it=1) for m in metas)
+    assert sorted(m.pe for m in metas) == [0, 1, 2, 3]
+
+
+PAPER_ASSIGNMENT = {
+    # node: (pe, c, it)  — the satisfying literals printed at the end of §4.2
+    11: (1, 0, 0), 6: (2, 0, 0), 7: (3, 0, 0),
+    2: (0, 1, 0), 1: (1, 1, 1), 8: (2, 1, 0), 3: (3, 1, 1),
+    9: (0, 2, 0), 10: (1, 2, 1), 4: (2, 2, 1), 5: (3, 2, 1),
+}
+
+
+def test_paper_assignment_is_valid(dfg, ms):
+    """The paper's printed model satisfies our full constraint system."""
+    grid = make_grid(2, 2)
+    kms = fold_kms(ms, 3)
+    placements = {n: Placement(node=n, pe=p, slot=Slot(c=c, it=it))
+                  for n, (p, c, it) in PAPER_ASSIGNMENT.items()}
+    mapping = Mapping(dfg=dfg, grid=grid, ii=3, num_folds=2,
+                      placements=placements)
+    errors = validate_mapping(mapping, kms=kms)
+    assert errors == [], errors
+
+
+def test_paper_assignment_backedge_labels(dfg, ms):
+    """Regression for the Eq. 18 reconciliation: the paper's model uses
+    it_d = it_s + 1 on back-edge 11->10, and our separation rule accepts
+    exactly that (s = gap = 2)."""
+    grid = make_grid(2, 2)
+    placements = {n: Placement(node=n, pe=p, slot=Slot(c=c, it=it))
+                  for n, (p, c, it) in PAPER_ASSIGNMENT.items()}
+    mapping = Mapping(dfg=dfg, grid=grid, ii=3, num_folds=2,
+                      placements=placements)
+    back = [e for e in dfg.edges if e.src == 11 and e.dst == 10]
+    assert len(back) == 1
+    assert separation(mapping, back[0]) == 2
+
+
+@pytest.mark.parametrize("backend", ["z3", "cdcl"])
+def test_mapper_finds_ii3(dfg, backend):
+    """Fig. 3/§4.2: a valid II=3 mapping exists on the 2x2 CGRA and the
+    solver finds it at the first tried II (mII)."""
+    grid = make_grid(2, 2)
+    res = map_dfg(dfg, grid, MapperConfig(backend=backend,
+                                          per_ii_timeout_s=120))
+    assert res.status == "mapped"
+    assert res.mapping.ii == 3
+    assert res.mii == 3
+    assert res.validation_errors == []
+    # mapped at the very first attempted II
+    assert res.attempts[0].ii == 3 and res.attempts[0].status == "sat"
+
+
+def test_example_distance_eq10(dfg, ms):
+    """§4.2 worked example of Eq. 10: n2(it0,c0) -> n9(it0,c2) has KMS
+    distance (2 - 0 + 3) mod 3 = 2."""
+    kms = fold_kms(ms, 3)
+    grid = make_grid(2, 2)
+    enc = KMSEncoding(dfg, kms, grid)
+    edge = next(e for e in dfg.edges if e.src == 2 and e.dst == 9)
+    pairs = enc.candidate_pairs(edge)
+    match = [(ss, sd, gap) for (ss, sd, gap) in pairs
+             if ss == Slot(0, 0) and sd == Slot(2, 0)]
+    assert len(match) == 1
+    assert match[0][2] == 2
