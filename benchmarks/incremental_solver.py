@@ -1,0 +1,151 @@
+"""Incremental vs cold-rebuild mapping: the tentpole perf benchmark.
+
+For each benchmark CIL the mapper runs twice through
+``map_for_execution`` (SAT mapping with the bitstream assembler as CEGAR
+oracle — prologue-clobber counterexamples feed back as blocking clauses):
+
+* **cold**  — ``MapperConfig(incremental=False)``: every CEGAR round
+  rebuilds the KMS encoding, re-Tseitins the CNF and cold-starts the
+  solver (the pre-incremental behavior);
+* **incremental** — ``MapperConfig(incremental=True)``: one encoding and
+  one persistent solver session per II; a CEGAR round appends a single
+  blocking clause and re-solves warm (learned clauses, VSIDS, phases
+  survive).
+
+Emits one ``BENCH {json}`` line per (cil, backend) with both wall times
+and the reuse counters, plus a summary row with the geomean speedup
+(overall and restricted to CEGAR-active kernels, where the incremental
+engine has re-solves to win on).  Feeds EXPERIMENTS.md §Perf (solver
+lane).
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import time
+from typing import Dict, List, Optional
+
+from repro.cgra import make_grid
+from repro.cgra.programs import BENCHMARKS
+from repro.cgra.simulator import map_for_execution
+from repro.core import MapperConfig
+
+# (cil, grid) pairs chosen so the sweep covers both regimes: gsm@2x2 is
+# CEGAR-active (the assembler rejects its first mapping with a prologue
+# clobber), the rest exercise the plain II sweep.
+CASES = [
+    ("bitcount", (2, 2)),
+    ("reversebits", (2, 2)),
+    ("gsm", (2, 2)),
+    ("gsm", (3, 3)),
+    ("stringsearch", (2, 2)),
+    ("stringsearch", (3, 3)),
+    ("sqrt", (3, 3)),
+]
+
+SMALLEST = [("bitcount", (2, 2))]  # CI smoke subset
+
+
+def _run_once(name: str, size, cfg: MapperConfig) -> Dict:
+    prog = BENCHMARKS[name]()
+    grid = make_grid(*size)
+    t0 = time.monotonic()
+    res = map_for_execution(prog, grid, cfg)
+    dt = time.monotonic() - t0
+    return {
+        "status": res.status, "ii": res.ii, "time_s": dt,
+        "attempts": len(res.attempts),
+        "encodings_built": res.encodings_built,
+        "incremental_solves": res.incremental_solves,
+        "cegar_rounds": res.cegar_rounds,
+    }
+
+
+def _geomean(xs: List[float]) -> Optional[float]:
+    xs = [x for x in xs if x > 0]
+    if not xs:
+        return None
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def run(backends=("cdcl",), per_ii_timeout: float = 20.0,
+        total_timeout: float = 40.0, repeats: int = 3,
+        cases=None) -> List[Dict]:
+    rows: List[Dict] = []
+    for name, size in (cases or CASES):
+        for backend in backends:
+            base = MapperConfig(backend=backend,
+                                per_ii_timeout_s=per_ii_timeout,
+                                total_timeout_s=total_timeout)
+            best: Dict[str, Dict] = {}
+            for mode, inc in (("cold", False), ("incremental", True)):
+                cfg = dataclasses.replace(base, incremental=inc)
+                runs = [_run_once(name, size, cfg) for _ in range(repeats)]
+                best[mode] = min(runs, key=lambda r: r["time_s"])
+            cold, incr = best["cold"], best["incremental"]
+            same = (cold["status"] == incr["status"]
+                    and cold["ii"] == incr["ii"])
+            speedup = (cold["time_s"] / incr["time_s"]
+                       if incr["time_s"] > 0 else None)
+            row = {
+                "bench": "incremental_solver", "cil": name,
+                "size": f"{size[0]}x{size[1]}", "backend": backend,
+                "status": incr["status"], "ii": incr["ii"],
+                "cold_s": round(cold["time_s"], 4),
+                "incremental_s": round(incr["time_s"], 4),
+                "speedup": round(speedup, 3) if speedup else None,
+                "cegar_rounds": incr["cegar_rounds"],
+                "attempts": incr["attempts"],
+                "encodings_built": incr["encodings_built"],
+                "incremental_solves": incr["incremental_solves"],
+                "same_result": same,
+            }
+            rows.append(row)
+            print("BENCH", json.dumps(row), flush=True)
+    for backend in backends:
+        brows = [r for r in rows if r["backend"] == backend and r["speedup"]]
+        active = [r for r in brows if r["cegar_rounds"] > 0]
+        overall = _geomean([r["speedup"] for r in brows])
+        active_g = _geomean([r["speedup"] for r in active])
+        summary = {
+            "bench": "incremental_solver", "cil": "geomean",
+            "backend": backend,
+            # None (not 0.0) when there is nothing to aggregate
+            "geomean_speedup": round(overall, 3) if overall else None,
+            "geomean_speedup_cegar_active": (round(active_g, 3)
+                                             if active_g else None),
+            "cegar_active_cases": len(active),
+            "all_same_result": all(r["same_result"] for r in brows),
+        }
+        rows.append(summary)
+        print("BENCH", json.dumps(summary), flush=True)
+    return rows
+
+
+def main(out="results/incremental_solver.json", backends=None, smoke=False):
+    if backends is None:
+        backends = ["cdcl"]
+        try:
+            import z3  # noqa: F401
+            backends.append("z3")
+        except ImportError:
+            pass
+    rows = run(backends=tuple(backends),
+               cases=SMALLEST if smoke else None,
+               repeats=1 if smoke else 3)
+    import os
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as fh:
+        json.dump(rows, fh, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    import sys
+    smoke = "--smoke" in sys.argv
+    backends = ["cdcl"] if smoke else None
+    rows = main(backends=backends, smoke=smoke)
+    if smoke:
+        bad = [r for r in rows if r.get("same_result") is False]
+        assert not bad, f"incremental/cold mismatch: {bad}"

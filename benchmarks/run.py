@@ -4,6 +4,7 @@
   table7_8        — Table 7 (II/U/energy/latency) + Table 8 (vs CPU) +
                     Fig. 11 (Pareto pruning), executed on the JAX simulator
   solver_opts     — beyond-paper SAT encoding/symmetry ablations
+  incremental_solver — incremental vs cold-rebuild mapping engine
   roofline_table  — §Roofline from the multi-pod dry-run sweep
 
 Prints ``name,us_per_call,derived`` CSV per the harness convention and
@@ -54,8 +55,19 @@ def main() -> None:
 
     from . import solver_opts
     name, dt, srows = _run("solver_opts", solver_opts.main)
-    agree = sum(1 for r in srows if r["same_ii_as_paper_encoding"])
+    agree = sum(1 for r in srows if r["same_ii_as_baseline"])
     rows.append((name, dt, f"ii_agreement={agree}/{len(srows)}"))
+
+    from . import incremental_solver
+    name, dt, irows = _run("incremental_solver", incremental_solver.main)
+    summaries = [r for r in irows if r.get("cil") == "geomean"]
+
+    def _fmt(r):
+        out = f"{r['backend']}={r['geomean_speedup']}x"
+        if r["geomean_speedup_cegar_active"] is not None:
+            out += f"(cegar={r['geomean_speedup_cegar_active']}x)"
+        return out
+    rows.append((name, dt, "speedup:" + ";".join(map(_fmt, summaries))))
 
     from . import roofline_table
     name, dt, recs = _run("roofline_table", roofline_table.main)

@@ -14,7 +14,6 @@ from typing import Dict, List, Optional, Tuple
 import numpy as np
 
 from ..core.mapping import Mapping
-from ..kernels.ops import decode_fields, init_state, run_program
 from .arch import PEGrid
 from .bitstream import AssembledCIL, assemble
 from .programs import LoopBuilder
@@ -60,6 +59,9 @@ class SimResult:
 def simulate(program: LoopBuilder, mapping: Mapping, mem: np.ndarray,
              batch: int = 1, backend: str = "ref",
              interpret: bool = True) -> SimResult:
+    # deferred: JAX is an optional extra — mapping (map_for_execution) must
+    # work without it; only execution needs the PE-array kernels
+    from ..kernels.ops import decode_fields, init_state, run_program
     asm = assemble(program, mapping)
     fields = decode_fields(asm.words())
     state = init_state(batch, mapping.grid.num_pes, mem)

@@ -2,9 +2,11 @@
 from .dfg import DFG, Edge, Node, running_example
 from .schedule import KMS, MobilitySchedule, Slot, asap_alap, fold_kms
 from .mii import min_ii, rec_ii, res_ii
-from .sat_encoding import KMSEncoding
+from .sat_encoding import EncodingBudgetExceeded, KMSEncoding
+from .backends import (CDCLSession, SolverSession, Z3Session, make_session,
+                       resolve_backend)
 from .mapping import Mapping, Placement, validate_mapping
-from .mapper import MapperConfig, MapResult, map_dfg
+from .mapper import IIAttempt, MapperConfig, MapResult, map_dfg
 from .baseline_ims import HeuristicConfig, map_dfg_heuristic
 from .regalloc import allocate_registers
 
@@ -12,8 +14,11 @@ __all__ = [
     "DFG", "Edge", "Node", "running_example",
     "KMS", "MobilitySchedule", "Slot", "asap_alap", "fold_kms",
     "min_ii", "rec_ii", "res_ii",
-    "KMSEncoding", "Mapping", "Placement", "validate_mapping",
-    "MapperConfig", "MapResult", "map_dfg",
+    "KMSEncoding", "EncodingBudgetExceeded",
+    "SolverSession", "CDCLSession", "Z3Session", "make_session",
+    "resolve_backend",
+    "Mapping", "Placement", "validate_mapping",
+    "MapperConfig", "MapResult", "IIAttempt", "map_dfg",
     "HeuristicConfig", "map_dfg_heuristic",
     "allocate_registers",
 ]

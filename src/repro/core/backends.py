@@ -1,17 +1,33 @@
 """Solver backends for the KMS encoding: Z3 (as in the paper) and our CDCL.
 
-Both consume the backend-neutral :class:`KMSEncoding` and return
-``(status, model, stats)`` with status in {"sat", "unsat", "unknown"}.
+Both are exposed two ways:
+
+* **Sessions** (:class:`Z3Session`, :class:`CDCLSession`) — a persistent
+  solver bound to one :class:`KMSEncoding`.  The encoding is translated
+  once; CEGAR blocking clauses are appended with
+  :meth:`SolverSession.add_clause` and re-solves keep learned clauses /
+  solver heuristic state warm.  This is what the incremental mapper loop
+  uses.
+* **One-shot functions** (:func:`solve_z3`, :func:`solve_cdcl`) — build a
+  fresh session, solve, discard.  Kept for tests and ablation baselines.
+
+All return ``(status, model, stats)`` with status in
+{"sat", "unsat", "unknown"}.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, Optional, Tuple
+from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..sat.cnf import And, CNF, Formula, Not, Or, Tseitin, Var
 from ..sat.cdcl import CDCLSolver, SAT, UNSAT, UNKNOWN
-from .sat_encoding import KMSEncoding
+from .sat_encoding import KMSEncoding, check_deadline as _check_deadline
+
+#: per-backend default at-most-one encoding: the paper uses pairwise with
+#: Z3; for the CDCL backend the linear sequential-counter encoding keeps
+#: CNF size linear in the literal count and is the measured-faster default.
+DEFAULT_AMO = {"z3": "pairwise", "cdcl": "sequential"}
 
 
 @dataclass
@@ -20,6 +36,21 @@ class SolveStats:
     time_s: float
     num_vars: int
     num_clauses: int
+    incremental: bool = False
+
+
+class SolverSession:
+    """Interface: persistent solver state over one encoding."""
+
+    backend: str
+
+    def add_clause(self, clause: Sequence[int]) -> None:
+        raise NotImplementedError
+
+    def solve(self, timeout_s: Optional[float] = None,
+              assumptions: Sequence[int] = ()
+              ) -> Tuple[str, Optional[Dict[int, bool]], SolveStats]:
+        raise NotImplementedError
 
 
 # ---------------------------------------------------------------------------
@@ -45,76 +76,124 @@ def _to_z3(f: Formula, z3, bools, cache):
     return out
 
 
-def solve_z3(enc: KMSEncoding, timeout_s: Optional[float] = None,
-             amo: str = "pairwise") -> Tuple[str, Optional[Dict[int, bool]], SolveStats]:
-    import z3
+class Z3Session(SolverSession):
+    """Persistent ``z3.Solver`` over one encoding.
 
-    t0 = time.monotonic()
-    solver = z3.Solver()
-    if timeout_s is not None:
-        solver.set("timeout", int(timeout_s * 1000))
-    nv = enc.stats.num_vars
-    bools = [None] + [z3.Bool(f"v{i}") for i in range(1, nv + 1)]
+    Z3 solvers are natively incremental: clauses added between ``check()``
+    calls keep learned lemmas valid (they are permanent constraints, so no
+    push/pop scope is needed — CEGAR blocking clauses never retract).
+    Scoped queries go through ``solve(assumptions=...)``, which maps to
+    ``check(*assumptions)``.
+    """
 
-    n_clauses = 0
-    # C1: exactly one per node
-    for lits in enc.node_lits.values():
-        solver.add(z3.Or(*[bools[l] for l in lits]))
-        n_clauses += 1
-        if amo == "builtin":
-            solver.add(z3.AtMost(*[bools[l] for l in lits], 1))
+    backend = "z3"
+
+    def __init__(self, enc: KMSEncoding, amo: Optional[str] = None,
+                 deadline: Optional[float] = None):
+        import z3
+        self._z3 = z3
+        self.enc = enc
+        self.amo = amo or DEFAULT_AMO["z3"]
+        self.solver = z3.Solver()
+        nv = enc.stats.num_vars
+        self.bools = [None] + [z3.Bool(f"v{i}") for i in range(1, nv + 1)]
+        self.num_clauses = 0
+        self._solved_before = False
+        self._build(deadline)
+
+    def _lit(self, l: int):
+        return self._z3.Not(self.bools[-l]) if l < 0 else self.bools[l]
+
+    def _build(self, deadline: Optional[float] = None) -> None:
+        z3, enc, bools, amo = self._z3, self.enc, self.bools, self.amo
+        if amo not in ("pairwise", "builtin"):
+            raise ValueError(f"z3 backend: unknown at-most-one encoding "
+                             f"{amo!r} (expected 'pairwise' or 'builtin')")
+        solver = self.solver
+
+        def check_deadline():
+            _check_deadline(deadline, "z3 constraint construction",
+                            enc.dfg.name, enc.kms.ii)
+
+        n_clauses = 0
+        # C1: exactly one per node
+        for lits in enc.node_lits.values():
+            check_deadline()
+            solver.add(z3.Or(*[bools[l] for l in lits]))
             n_clauses += 1
-        else:
-            for i in range(len(lits)):
-                for j in range(i + 1, len(lits)):
-                    solver.add(z3.Or(z3.Not(bools[lits[i]]),
-                                     z3.Not(bools[lits[j]])))
-                    n_clauses += 1
-    # C2: at most one node per (PE, row)
-    for lits in enc.pe_row_lits.values():
-        if len(lits) < 2:
-            continue
-        if amo == "builtin":
-            solver.add(z3.AtMost(*[bools[l] for l in lits], 1))
+            if amo == "builtin":
+                solver.add(z3.AtMost(*[bools[l] for l in lits], 1))
+                n_clauses += 1
+            else:
+                for i in range(len(lits)):
+                    for j in range(i + 1, len(lits)):
+                        solver.add(z3.Or(z3.Not(bools[lits[i]]),
+                                         z3.Not(bools[lits[j]])))
+                        n_clauses += 1
+        # C2: at most one node per (PE, row)
+        for lits in enc.pe_row_lits.values():
+            if len(lits) < 2:
+                continue
+            check_deadline()
+            if amo == "builtin":
+                solver.add(z3.AtMost(*[bools[l] for l in lits], 1))
+                n_clauses += 1
+            else:
+                for i in range(len(lits)):
+                    for j in range(i + 1, len(lits)):
+                        if enc.meta_of[lits[i]].node == enc.meta_of[lits[j]].node:
+                            continue  # covered by C1
+                        solver.add(z3.Or(z3.Not(bools[lits[i]]),
+                                         z3.Not(bools[lits[j]])))
+                        n_clauses += 1
+        # C3: dependency routing
+        cache: dict = {}
+        for _, f in enc.edge_formulas:
+            check_deadline()
+            solver.add(_to_z3(f, z3, bools, cache))
             n_clauses += 1
-        else:
-            for i in range(len(lits)):
-                for j in range(i + 1, len(lits)):
-                    if enc.meta_of[lits[i]].node == enc.meta_of[lits[j]].node:
-                        continue  # covered by C1
-                    solver.add(z3.Or(z3.Not(bools[lits[i]]),
-                                     z3.Not(bools[lits[j]])))
-                    n_clauses += 1
-    # C3: dependency routing
-    cache: dict = {}
-    for _, f in enc.edge_formulas:
-        solver.add(_to_z3(f, z3, bools, cache))
-        n_clauses += 1
-    # symmetry breaking
-    for lit in enc.forced_false:
-        solver.add(z3.Not(bools[lit]))
-        n_clauses += 1
-    # CEGAR blocking clauses (literals are DIMACS-signed var indices)
-    for clause in enc.blocking_clauses:
-        solver.add(z3.Or(*[z3.Not(bools[-l]) if l < 0 else bools[l]
-                           for l in clause]))
-        n_clauses += 1
+        # symmetry breaking
+        for lit in enc.forced_false:
+            solver.add(z3.Not(bools[lit]))
+            n_clauses += 1
+        # CEGAR blocking clauses (literals are DIMACS-signed var indices)
+        for clause in enc.blocking_clauses:
+            solver.add(z3.Or(*[self._lit(l) for l in clause]))
+            n_clauses += 1
+        self.num_clauses = n_clauses
 
-    if enc.is_trivially_unsat:
-        stats = SolveStats("z3", time.monotonic() - t0, nv, n_clauses)
-        return UNSAT, None, stats
+    def add_clause(self, clause: Sequence[int]) -> None:
+        self.solver.add(self._z3.Or(*[self._lit(l) for l in clause]))
+        self.num_clauses += 1
 
-    res = solver.check()
-    dt = time.monotonic() - t0
-    stats = SolveStats("z3", dt, nv, n_clauses)
-    if res == z3.sat:
-        m = solver.model()
-        model = {i: bool(m.eval(bools[i], model_completion=True))
-                 for i in range(1, nv + 1)}
-        return SAT, model, stats
-    if res == z3.unsat:
-        return UNSAT, None, stats
-    return UNKNOWN, None, stats
+    def solve(self, timeout_s: Optional[float] = None,
+              assumptions: Sequence[int] = ()
+              ) -> Tuple[str, Optional[Dict[int, bool]], SolveStats]:
+        z3, enc = self._z3, self.enc
+        t0 = time.monotonic()
+        incremental = self._solved_before
+        self._solved_before = True
+        nv = enc.stats.num_vars
+
+        def stats() -> SolveStats:
+            return SolveStats("z3", time.monotonic() - t0, nv,
+                              self.num_clauses, incremental=incremental)
+
+        if enc.is_trivially_unsat:
+            return UNSAT, None, stats()
+        # 0 = no limit; always set so a budget from an earlier call on this
+        # persistent solver doesn't leak into an unbounded one
+        self.solver.set("timeout", max(1, int(timeout_s * 1000))
+                        if timeout_s is not None else 0)
+        res = self.solver.check(*[self._lit(l) for l in assumptions])
+        if res == z3.sat:
+            m = self.solver.model()
+            model = {i: bool(m.eval(self.bools[i], model_completion=True))
+                     for i in range(1, nv + 1)}
+            return SAT, model, stats()
+        if res == z3.unsat:
+            return UNSAT, None, stats()
+        return UNKNOWN, None, stats()
 
 
 # ---------------------------------------------------------------------------
@@ -122,21 +201,35 @@ def solve_z3(enc: KMSEncoding, timeout_s: Optional[float] = None,
 # ---------------------------------------------------------------------------
 
 
-def encoding_to_cnf(enc: KMSEncoding, amo: str = "pairwise") -> CNF:
+def encoding_to_cnf(enc: KMSEncoding, amo: str = "pairwise",
+                    deadline: Optional[float] = None) -> CNF:
+    """Tseitin-transform an encoding.  ``deadline`` budget-guards the
+    (Python-side) CNF construction the same way encoding construction is."""
+    if amo not in ("pairwise", "sequential"):
+        raise ValueError(f"cdcl backend: unknown at-most-one encoding "
+                         f"{amo!r} (expected 'pairwise' or 'sequential')")
+
+    def check_deadline():
+        _check_deadline(deadline, "CNF construction", enc.dfg.name,
+                        enc.kms.ii)
+
     cnf = CNF()
     cnf.ensure_var(enc.stats.num_vars)
     for lits in enc.node_lits.values():
+        check_deadline()
         cnf.exactly_one(lits, encoding="sequential" if amo == "sequential"
                         else "pairwise")
     for lits in enc.pe_row_lits.values():
         if len(lits) < 2:
             continue
+        check_deadline()
         if amo == "sequential":
             cnf.at_most_one_sequential(lits)
         else:
             cnf.at_most_one_pairwise(lits)
     ts = Tseitin(cnf)
     for _, f in enc.edge_formulas:
+        check_deadline()
         ts.assert_formula(f)
     for lit in enc.forced_false:
         cnf.add_clause((-lit,))
@@ -149,21 +242,82 @@ def encoding_to_cnf(enc: KMSEncoding, amo: str = "pairwise") -> CNF:
     return cnf
 
 
+class CDCLSession(SolverSession):
+    """Persistent :class:`CDCLSolver` over one encoding's Tseitin CNF.
+
+    The CNF is built once; blocking clauses go straight into the live
+    solver (learned clauses, watches, VSIDS activity and saved phases all
+    survive), so a CEGAR round costs one clause plus a warm re-solve.
+    """
+
+    backend = "cdcl"
+
+    def __init__(self, enc: KMSEncoding, amo: Optional[str] = None,
+                 deadline: Optional[float] = None):
+        self.enc = enc
+        self.amo = amo or DEFAULT_AMO["cdcl"]
+        self.cnf = encoding_to_cnf(enc, amo=self.amo, deadline=deadline)
+        self.solver = CDCLSolver(self.cnf)
+        self.num_clauses = len(self.cnf.clauses)
+
+    def add_clause(self, clause: Sequence[int]) -> None:
+        self.solver.add_clauses([tuple(clause)])
+        self.num_clauses += 1
+
+    def solve(self, timeout_s: Optional[float] = None,
+              assumptions: Sequence[int] = ()
+              ) -> Tuple[str, Optional[Dict[int, bool]], SolveStats]:
+        t0 = time.monotonic()
+        incremental = self.solver.stats.solve_calls > 0
+        res = self.solver.solve(timeout_s=timeout_s, assumptions=assumptions)
+        stats = SolveStats("cdcl", time.monotonic() - t0, self.cnf.num_vars,
+                           self.num_clauses, incremental=incremental)
+        if res == SAT:
+            model = self.solver.model()
+            # keep only the original encoding variables
+            model = {i: model.get(i, False)
+                     for i in range(1, self.enc.stats.num_vars + 1)}
+            return SAT, model, stats
+        return res, None, stats
+
+
+SESSIONS = {"z3": Z3Session, "cdcl": CDCLSession}
+
+
+def make_session(backend: str, enc: KMSEncoding, amo: Optional[str] = None,
+                 deadline: Optional[float] = None) -> SolverSession:
+    try:
+        cls = SESSIONS[backend]
+    except KeyError:
+        raise KeyError(f"unknown backend {backend!r} "
+                       f"(expected one of {sorted(SESSIONS)})") from None
+    return cls(enc, amo=amo, deadline=deadline)
+
+
+def resolve_backend(backend: str) -> str:
+    """``auto`` -> z3 when importable (the paper's solver), else cdcl."""
+    if backend != "auto":
+        return backend
+    try:
+        import z3  # noqa: F401
+        return "z3"
+    except ImportError:
+        return "cdcl"
+
+
+# ---------------------------------------------------------------------------
+# One-shot wrappers (tests / ablations)
+# ---------------------------------------------------------------------------
+
+
+def solve_z3(enc: KMSEncoding, timeout_s: Optional[float] = None,
+             amo: str = "pairwise") -> Tuple[str, Optional[Dict[int, bool]], SolveStats]:
+    return Z3Session(enc, amo=amo).solve(timeout_s=timeout_s)
+
+
 def solve_cdcl(enc: KMSEncoding, timeout_s: Optional[float] = None,
-               amo: str = "pairwise") -> Tuple[str, Optional[Dict[int, bool]], SolveStats]:
-    t0 = time.monotonic()
-    cnf = encoding_to_cnf(enc, amo=amo)
-    solver = CDCLSolver(cnf)
-    res = solver.solve(timeout_s=timeout_s)
-    dt = time.monotonic() - t0
-    stats = SolveStats("cdcl", dt, cnf.num_vars, len(cnf.clauses))
-    if res == SAT:
-        model = solver.model()
-        # keep only the original encoding variables
-        model = {i: model.get(i, False)
-                 for i in range(1, enc.stats.num_vars + 1)}
-        return SAT, model, stats
-    return res, None, stats
+               amo: Optional[str] = None) -> Tuple[str, Optional[Dict[int, bool]], SolveStats]:
+    return CDCLSession(enc, amo=amo).solve(timeout_s=timeout_s)
 
 
 BACKENDS = {"z3": solve_z3, "cdcl": solve_cdcl}

@@ -1,10 +1,21 @@
-"""SAT-MapIt's iterative mapping loop (paper Fig. 4).
+"""SAT-MapIt's iterative mapping loop (paper Fig. 4), made incremental.
 
 ``map_dfg`` searches II = mII, mII+1, ... For each II it folds the mobility
-schedule into the KMS, encodes C1/C2/C3, calls the solver, and — on SAT —
-validates register pressure; RA failure bumps II exactly as in the paper.
+schedule into the KMS, encodes C1/C2/C3 **once**, opens a persistent solver
+session, and — on SAT — validates register pressure; RA failure bumps II
+exactly as in the paper.  CEGAR counterexamples (from the bitstream
+assembler's ``assemble_check`` oracle) append a single blocking clause to
+the live session instead of rebuilding encoding + CNF + solver from
+scratch, so learned clauses and solver heuristic state survive across
+rounds.  ``MapResult.encodings_built`` / ``incremental_solves`` expose the
+reuse for tests and benchmarks; ``incremental=False`` in
+:class:`MapperConfig` restores the cold-rebuild behavior as an ablation
+baseline.
+
 ``per_ii_timeout_s`` implements the paper's §5.5 *non-exact* mode (bounded
-exploration per II, advancing on timeout).
+exploration per II, advancing on timeout).  ``total_timeout_s`` covers
+Python-side encoding/CNF construction too (via a deadline threaded into
+:class:`KMSEncoding`), not just solver time.
 """
 from __future__ import annotations
 
@@ -13,19 +24,20 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from ..cgra.arch import PEGrid
-from .backends import BACKENDS
+from .backends import make_session, resolve_backend
 from .dfg import DFG
 from .mapping import Mapping, Placement, classify_handoff, validate_mapping
 from .mii import min_ii
 from .regalloc import allocate_registers
-from .sat_encoding import KMSEncoding
+from .sat_encoding import EncodingBudgetExceeded, KMSEncoding
 from .schedule import asap_alap, fold_kms
 
 
 @dataclass
 class MapperConfig:
-    backend: str = "z3"
-    amo: str = "pairwise"          # paper encoding; "builtin"/"sequential" are ours
+    backend: str = "auto"          # "z3" | "cdcl" | "auto" (z3 if installed)
+    amo: Optional[str] = None      # None -> backend default (z3: pairwise
+                                   # as in the paper; cdcl: sequential)
     per_ii_timeout_s: Optional[float] = None
     total_timeout_s: Optional[float] = None
     ii_max: int = 50               # paper's black-cross cap
@@ -33,6 +45,7 @@ class MapperConfig:
     on_timeout: str = "advance"    # "advance" (non-exact §5.5) | "fail"
     validate: bool = True
     max_cegar_rounds: int = 25     # blocking-clause refinements per II
+    incremental: bool = True       # False: cold-rebuild per CEGAR round
 
 
 @dataclass
@@ -43,6 +56,8 @@ class IIAttempt:
     num_vars: int = 0
     num_clauses: int = 0
     ra_ok: Optional[bool] = None
+    encode_time_s: float = 0.0     # encoding+CNF construction (0 on reuse)
+    incremental: bool = False      # solved on a warm session
 
 
 @dataclass
@@ -53,6 +68,10 @@ class MapResult:
     attempts: List[IIAttempt] = field(default_factory=list)
     total_time_s: float = 0.0
     validation_errors: List[str] = field(default_factory=list)
+    backend: str = ""                # resolved backend actually used
+    encodings_built: int = 0         # KMSEncoding constructions
+    incremental_solves: int = 0      # solves that reused a live session
+    cegar_rounds: int = 0            # blocking clauses fed back by the oracle
 
     @property
     def ii(self) -> Optional[int]:
@@ -81,34 +100,64 @@ def map_dfg(dfg: DFG, grid: PEGrid,
     forbid (e.g. a prologue-clobber counterexample from the bitstream
     assembler); the same II is re-solved with the combination blocked."""
     cfg = config or MapperConfig()
-    solve = BACKENDS[cfg.backend]
+    backend = resolve_backend(cfg.backend)
     t_start = time.monotonic()
+    deadline = (t_start + cfg.total_timeout_s
+                if cfg.total_timeout_s is not None else None)
     ms = asap_alap(dfg)
     mii = min_ii(dfg, grid.num_pes)
     ii = max(mii, ii_start or 0)
-    result = MapResult(mapping=None, status="unsat-capped", mii=mii)
+    result = MapResult(mapping=None, status="unsat-capped", mii=mii,
+                       backend=backend)
 
     blocked: List = []
     while ii <= cfg.ii_max:
-        if (cfg.total_timeout_s is not None
-                and time.monotonic() - t_start > cfg.total_timeout_s):
+        if deadline is not None and time.monotonic() > deadline:
             result.status = "timeout"
             break
         kms = fold_kms(ms, ii)
+        enc: Optional[KMSEncoding] = None
+        session = None
+        new_clause = None
         found_or_advance = False
         for _cegar in range(max(cfg.max_cegar_rounds, 1)):
-            enc = KMSEncoding(dfg, kms, grid,
-                              symmetry_break=cfg.symmetry_break,
-                              blocked_combinations=blocked)
+            t_enc = time.monotonic()
+            try:
+                if enc is None or not cfg.incremental:
+                    enc = KMSEncoding(dfg, kms, grid,
+                                      symmetry_break=cfg.symmetry_break,
+                                      blocked_combinations=blocked,
+                                      deadline=deadline)
+                    session = make_session(backend, enc, amo=cfg.amo,
+                                           deadline=deadline)
+                    result.encodings_built += 1
+                elif new_clause is not None:
+                    # within a CEGAR loop only the new blocking clause
+                    # reaches the live solver
+                    session.add_clause(new_clause)
+            except EncodingBudgetExceeded:
+                result.status = "timeout"
+                found_or_advance = True
+                break
+            encode_time = time.monotonic() - t_enc
+            new_clause = None
             budget = cfg.per_ii_timeout_s
-            if cfg.total_timeout_s is not None:
-                remaining = cfg.total_timeout_s - (time.monotonic() - t_start)
+            if deadline is not None:
+                remaining = deadline - time.monotonic()
+                if remaining <= 0:
+                    result.status = "timeout"
+                    found_or_advance = True
+                    break
                 budget = min(budget, remaining) if budget else remaining
-            status, model, stats = solve(enc, timeout_s=budget, amo=cfg.amo)
+            status, model, stats = session.solve(timeout_s=budget)
             attempt = IIAttempt(ii=ii, status=status, time_s=stats.time_s,
                                 num_vars=stats.num_vars,
-                                num_clauses=stats.num_clauses)
+                                num_clauses=stats.num_clauses,
+                                encode_time_s=encode_time,
+                                incremental=stats.incremental)
             result.attempts.append(attempt)
+            if stats.incremental:
+                result.incremental_solves += 1
             if status == "sat":
                 mapping = _extract_mapping(dfg, grid, kms, enc, model)
                 ra = allocate_registers(mapping)
@@ -125,7 +174,16 @@ def map_dfg(dfg: DFG, grid: PEGrid,
                 if assemble_check is not None:
                     counterexample = assemble_check(mapping)
                     if counterexample:
+                        result.cegar_rounds += 1
                         blocked.append(counterexample)
+                        if cfg.incremental:
+                            new_clause = enc.add_blocked_combination(
+                                counterexample)
+                            if new_clause is None:
+                                # counterexample outside the literal space:
+                                # nothing to block; a rebuild would loop on
+                                # the same mapping, so advance II instead
+                                break
                         continue  # re-solve same II with the combo blocked
                 result.mapping = mapping
                 result.status = "mapped"

@@ -25,10 +25,19 @@ with iteration label ``it``.  Three clause families:
     register allocation), or the PEs are neighbors and **no node executes on
     the producer PE at any row strictly between** producer and consumer
     (ζ2, Eq. 16-17: the output register must survive).
+
+The encoding is built **once per (DFG, II)** and reused across CEGAR
+rounds: :meth:`KMSEncoding.add_blocked_combination` converts a lazy
+counterexample into a single blocking clause without re-deriving the
+literal space or the C1/C2/C3 families, so an incremental backend session
+only ever receives the new clause.  ``deadline`` (a ``time.monotonic``
+timestamp) budget-guards construction itself — the mapper threads its
+``total_timeout_s`` through so Python-side encoding work cannot overrun
+the solve budget unnoticed.
 """
 from __future__ import annotations
 
-import itertools
+import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
@@ -36,6 +45,19 @@ from ..cgra.arch import PEGrid
 from ..sat.cnf import And, Formula, Not, Or, Var
 from .dfg import DFG, Edge
 from .schedule import KMS, Slot
+
+
+class EncodingBudgetExceeded(TimeoutError):
+    """Encoding construction overran its deadline (mapper treats as timeout)."""
+
+
+def check_deadline(deadline: Optional[float], what: str, name: str,
+                   ii: int) -> None:
+    """Shared budget guard for every Python-side construction phase
+    (encoding, Tseitin CNF, z3 constraint build)."""
+    if deadline is not None and time.monotonic() > deadline:
+        raise EncodingBudgetExceeded(
+            f"{what} for {name!r} at II={ii} exceeded its time budget")
 
 
 @dataclass(frozen=True)
@@ -64,16 +86,20 @@ class KMSEncoding:
 
     def __init__(self, dfg: DFG, kms: KMS, grid: PEGrid,
                  symmetry_break: bool = False,
-                 blocked_combinations=()):
+                 blocked_combinations=(),
+                 deadline: Optional[float] = None):
         """``blocked_combinations``: iterable of placement-triple lists
         [(node, pe, Slot), ...]; each list becomes a clause forbidding that
         joint placement (CEGAR lazy constraints, e.g. prologue-clobber
-        counterexamples from the bitstream assembler)."""
+        counterexamples from the bitstream assembler).  ``deadline``: abort
+        construction with :class:`EncodingBudgetExceeded` past this
+        ``time.monotonic()`` timestamp."""
         self.dfg = dfg
         self.kms = kms
         self.grid = grid
         self.symmetry_break = symmetry_break and grid.is_vertex_transitive()
-        self.blocked_combinations = list(blocked_combinations)
+        self.blocked_combinations: List = []
+        self._deadline = deadline
 
         self.var_of: Dict[Tuple[int, int, Slot], int] = {}
         self.meta_of: List[Optional[LitMeta]] = [None]  # 1-indexed
@@ -81,28 +107,30 @@ class KMSEncoding:
         self.pe_row_lits: Dict[Tuple[int, int], List[int]] = {}
         self.stats = EncodingStats()
 
+        # hot-path precomputes shared by every edge formula
+        self._reachable_pairs: List[Tuple[int, int]] = grid.reachable_pairs()
+        self._var_nodes: List[Optional[Var]] = [None]
+        self._blocker_cache: Dict[Tuple[int, int, int],
+                                  Tuple[Tuple[int, Var], ...]] = {}
+
         self._build_literals()
         self.edge_formulas: List[Tuple[Edge, Formula]] = []
         self._build_edges()
         self.forced_false: List[int] = []
         self.blocking_clauses: List[List[int]] = []
-        for combo in self.blocked_combinations:
-            clause = []
-            valid = True
-            for (n, p, slot) in combo:
-                var = self.var_of.get((n, p, slot))
-                if var is None:
-                    valid = False
-                    break
-                clause.append(-var)
-            if valid and clause:
-                self.blocking_clauses.append(clause)
+        for combo in blocked_combinations:
+            self.add_blocked_combination(combo)
         if self.symmetry_break:
             self._build_symmetry_breaking()
+        self._deadline = None  # construction done; reuse is cheap
         self.stats.num_vars = len(self.meta_of) - 1
         self.stats.num_exactly_one_groups = len(self.node_lits)
         self.stats.num_amo_groups = len(self.pe_row_lits)
         self.stats.num_edge_formulas = len(self.edge_formulas)
+
+    def _check_deadline(self) -> None:
+        check_deadline(self._deadline, "encoding construction",
+                       self.dfg.name, self.kms.ii)
 
     # -- literal space -----------------------------------------------------------
 
@@ -113,6 +141,7 @@ class KMSEncoding:
                 for p in range(self.grid.num_pes):
                     idx = len(self.meta_of)
                     self.meta_of.append(LitMeta(node=n, pe=p, slot=slot))
+                    self._var_nodes.append(Var(idx))
                     self.var_of[(n, p, slot)] = idx
                     lits.append(idx)
                     self.pe_row_lits.setdefault((p, slot.c), []).append(idx)
@@ -138,32 +167,44 @@ class KMSEncoding:
                 out.append((ss, sd, gap))
         return out
 
-    def _blockers(self, p_s: int, c_s: int, eff_gap: int,
-                  skip: Tuple[int, int]) -> List[Formula]:
-        """Literals that would overwrite p_s's output register in the
-        ``eff_gap - 1`` rows strictly between producer and consumer."""
+    def _blocker_lits(self, p_s: int, c_s: int,
+                      eff_gap: int) -> Tuple[Tuple[int, Var], ...]:
+        """(lit, Var) pairs that would overwrite p_s's output register in
+        the ``eff_gap - 1`` rows strictly between producer and consumer
+        (memoized — the same window recurs across slots and edges)."""
+        key = (p_s, c_s, eff_gap)
+        cached = self._blocker_cache.get(key)
+        if cached is not None:
+            return cached
         ii = self.kms.ii
-        out: List[Formula] = []
+        out: List[Tuple[int, Var]] = []
         for k in range(1, eff_gap):
             row = (c_s + k) % ii
             for lit in self.pe_row_lits.get((p_s, row), ()):
-                if lit in skip:
-                    continue
-                out.append(Var(lit))
-        return out
+                out.append((lit, self._var_nodes[lit]))
+        result = tuple(out)
+        self._blocker_cache[key] = result
+        return result
+
+    def _blockers(self, p_s: int, c_s: int, eff_gap: int,
+                  skip: Tuple[int, int]) -> List[Formula]:
+        return [var for lit, var in self._blocker_lits(p_s, c_s, eff_gap)
+                if lit not in skip]
 
     def _edge_formula(self, edge: Edge) -> Optional[Formula]:
         disjuncts: List[Formula] = []
         ii = self.kms.ii
+        var_nodes = self._var_nodes
+        var_of = self.var_of
         if edge.kind == "colocate":
             # same-PE pinning (pipeline-stage colocation): purely spatial —
             # no timing restriction (dataflow timing comes from data edges)
             for ss in self.kms.slots[edge.src]:
                 for sd in self.kms.slots[edge.dst]:
                     for p in range(self.grid.num_pes):
-                        vi = self.var_of[(edge.src, p, ss)]
-                        wj = self.var_of[(edge.dst, p, sd)]
-                        disjuncts.append(And((Var(vi), Var(wj))))
+                        vi = var_of[(edge.src, p, ss)]
+                        wj = var_of[(edge.dst, p, sd)]
+                        disjuncts.append(And((var_nodes[vi], var_nodes[wj])))
             return Or(disjuncts)
         pairs = self.candidate_pairs(edge)
         self.stats.num_candidate_pairs += len(pairs)
@@ -176,46 +217,74 @@ class KMSEncoding:
             for (ss, sd, gap) in pairs:
                 eff = gap if gap != 0 else ii
                 for p in range(self.grid.num_pes):
-                    vi = self.var_of[(edge.src, p, ss)]
-                    wj = self.var_of[(edge.dst, p, sd)]
+                    vi = var_of[(edge.src, p, ss)]
+                    wj = var_of[(edge.dst, p, sd)]
                     blockers = self._blockers(p, ss.c, eff, (vi, wj))
                     if blockers:
                         disjuncts.append(
-                            And((Var(vi), Var(wj), Not(Or(blockers)))))
+                            And((var_nodes[vi], var_nodes[wj],
+                                 Not(Or(blockers)))))
                     else:
-                        disjuncts.append(And((Var(vi), Var(wj))))
+                        disjuncts.append(And((var_nodes[vi], var_nodes[wj])))
             return Or(disjuncts)
+        reachable = self._reachable_pairs
         for (ss, sd, gap) in pairs:
             if edge.src == edge.dst:
                 # value loops back into the same PE through the register file
                 for p in range(self.grid.num_pes):
-                    disjuncts.append(Var(self.var_of[(edge.src, p, ss)]))
+                    disjuncts.append(var_nodes[var_of[(edge.src, p, ss)]])
                 continue
-            for (p_s, p_d) in self.grid.reachable_pairs():
-                vi = self.var_of[(edge.src, p_s, ss)]
-                wj = self.var_of[(edge.dst, p_d, sd)]
+            for (p_s, p_d) in reachable:
+                vi = var_of[(edge.src, p_s, ss)]
+                wj = var_of[(edge.dst, p_d, sd)]
                 if gap == 1:
                     # γ (Eq. 11): one-cycle output-register hand-off
-                    disjuncts.append(And((Var(vi), Var(wj))))
+                    disjuncts.append(And((var_nodes[vi], var_nodes[wj])))
                 elif p_s == p_d:
                     # ζ1 (Eq. 14): same-PE register-file hand-off
-                    disjuncts.append(And((Var(vi), Var(wj))))
+                    disjuncts.append(And((var_nodes[vi], var_nodes[wj])))
                 else:
                     # ζ2 (Eq. 16): output register held across eff_gap cycles
                     eff = gap if gap != 0 else ii
                     blockers = self._blockers(p_s, ss.c, eff, (vi, wj))
                     if blockers:
                         disjuncts.append(
-                            And((Var(vi), Var(wj), Not(Or(blockers)))))
+                            And((var_nodes[vi], var_nodes[wj],
+                                 Not(Or(blockers)))))
                     else:
-                        disjuncts.append(And((Var(vi), Var(wj))))
+                        disjuncts.append(And((var_nodes[vi], var_nodes[wj])))
         return Or(disjuncts)
 
     def _build_edges(self) -> None:
         for edge in self.dfg.edges:
+            self._check_deadline()
             f = self._edge_formula(edge)
             if f is not None:
                 self.edge_formulas.append((edge, f))
+
+    # -- CEGAR blocking clauses (incremental) -----------------------------------------
+
+    def blocking_clause(self, combo: Sequence[Tuple[int, int, Slot]]
+                        ) -> Optional[List[int]]:
+        """DIMACS clause forbidding a joint placement, or None if any triple
+        names a literal outside this encoding's space (e.g. a slot that does
+        not exist at this II — nothing to block then)."""
+        clause: List[int] = []
+        for (n, p, slot) in combo:
+            var = self.var_of.get((n, p, slot))
+            if var is None:
+                return None
+            clause.append(-var)
+        return clause if clause else None
+
+    def add_blocked_combination(self, combo) -> Optional[List[int]]:
+        """Record a counterexample; returns the new blocking clause (the only
+        thing an incremental solver session needs to ingest) or None."""
+        self.blocked_combinations.append(list(combo))
+        clause = self.blocking_clause(combo)
+        if clause:
+            self.blocking_clauses.append(clause)
+        return clause
 
     # -- symmetry breaking (beyond paper) -------------------------------------------
 

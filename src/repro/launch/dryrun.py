@@ -85,7 +85,7 @@ def _analysis_cost(cfg, shape, mesh, variant, dec_mult, enc_mult,
     model = Model(cfg_k, RunConfig(**overrides))
     fn, args, shardings, donate = build_step_and_specs(
         model, shape, mesh, variant)
-    with jax.set_mesh(mesh):
+    with shd.set_mesh(mesh):
         lowered = jax.jit(fn, in_shardings=shardings,
                           donate_argnums=donate).lower(*args)
         compiled = lowered.compile()
@@ -150,7 +150,7 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str,
         mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
         fn, args, shardings, donate = build_step_and_specs(
             model, shape, mesh, variant)
-        with jax.set_mesh(mesh):
+        with shd.set_mesh(mesh):
             jitted = jax.jit(fn, in_shardings=shardings,
                              donate_argnums=donate)
             lowered = jitted.lower(*args)

@@ -60,7 +60,7 @@ def main() -> None:
                              ("data", "model"))
         pshard = shd.param_shardings(model.defs, mesh, args.variant)
         params = jax.device_put(params, pshard)
-        ctx = jax.set_mesh(mesh)
+        ctx = shd.set_mesh(mesh)
         ctx.__enter__()
     jstep = jax.jit(step)
 

@@ -21,6 +21,14 @@ from jax.sharding import Mesh, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 
+def _pcast_varying(x, axis: str):
+    """``jax.lax.pcast(..., to="varying")`` across jax versions: older
+    releases have no varying-type machinery, where the cast is a no-op."""
+    if hasattr(jax.lax, "pcast"):
+        return jax.lax.pcast(x, (axis,), to="varying")
+    return x
+
+
 @dataclass
 class PipelineRun:
     outputs: jax.Array      # (M, ...) microbatch outputs in order
@@ -65,10 +73,9 @@ def pipeline_forward(mesh: Mesh, stage_fn: Callable, stage_params,
             x = jax.lax.ppermute(x, axis, perm)
             return (x, outputs), None
 
-        x0 = jax.lax.pcast(jnp.zeros_like(micro[0]), (axis,), to="varying")
-        outs0 = jax.lax.pcast(
-            jnp.zeros((M,) + micro.shape[1:], micro.dtype), (axis,),
-            to="varying")
+        x0 = _pcast_varying(jnp.zeros_like(micro[0]), axis)
+        outs0 = _pcast_varying(
+            jnp.zeros((M,) + micro.shape[1:], micro.dtype), axis)
         (x, outputs), _ = jax.lax.scan(tick, (x0, outs0),
                                        jnp.arange(total_ticks))
         # only the last stage holds real outputs; share them along the ring

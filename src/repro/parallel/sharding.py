@@ -30,6 +30,15 @@ from ..models.params import ParamDef, is_def
 MeshAxes = Tuple[str, ...]
 
 
+def set_mesh(mesh: Mesh):
+    """``jax.set_mesh`` across jax versions: newer releases expose it at the
+    top level; on older ones a ``Mesh`` is itself the context manager that
+    installs the same global default."""
+    if hasattr(jax, "set_mesh"):
+        return jax.set_mesh(mesh)
+    return mesh
+
+
 def data_axes(mesh: Mesh) -> Tuple[str, ...]:
     return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
 

@@ -1,4 +1,15 @@
-"""A self-contained CDCL SAT solver (watched literals, 1-UIP, VSIDS, Luby).
+"""A self-contained incremental CDCL SAT solver.
+
+Watched literals, 1-UIP learning, VSIDS, Luby restarts, phase saving —
+plus the two hooks an incremental mapping loop needs:
+
+* :meth:`CDCLSolver.add_clauses` appends clauses to a live solver, keeping
+  learned clauses, watch lists and VSIDS activity intact (the CEGAR loop in
+  ``repro.core.mapper`` adds one blocking clause per round instead of
+  rebuilding the instance);
+* :meth:`CDCLSolver.solve` accepts ``assumptions`` — literals asserted as
+  scoped decisions for one call and fully undone afterwards, so the same
+  solver answers a sequence of related queries.
 
 This is the framework's Z3-independent backend: the production mapper uses
 Z3 (as the paper does), but a deployable toolchain cannot hard-require a
@@ -9,8 +20,8 @@ instances the KMS encoding produces at edge-CGRA sizes.
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Sequence, Tuple
+from dataclasses import dataclass
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .cnf import CNF
 
@@ -20,14 +31,15 @@ UNKNOWN = "unknown"
 
 
 def luby(i: int) -> int:
-    """Luby restart sequence (1,1,2,1,1,2,4,...)."""
+    """Luby restart sequence (1,1,2,1,1,2,4,...), 0-indexed."""
+    x = i + 1  # classic 1-indexed formulation
     k = 1
-    while (1 << (k + 1)) - 1 <= i:
+    while (1 << k) - 1 < x:
         k += 1
-    while (1 << k) - 1 != i + 1:
-        i = i - (1 << (k - 1)) + 1
+    while (1 << k) - 1 != x:
+        x -= (1 << (k - 1)) - 1
         k = 1
-        while (1 << (k + 1)) - 1 <= i:
+        while (1 << k) - 1 < x:
             k += 1
     return 1 << (k - 1)
 
@@ -39,55 +51,87 @@ class Stats:
     conflicts: int = 0
     restarts: int = 0
     learned: int = 0
+    solve_calls: int = 0
+    clauses_added: int = 0
     time_s: float = 0.0
 
 
 class CDCLSolver:
-    """Conflict-driven clause learning over a fixed CNF."""
+    """Conflict-driven clause learning over a growable CNF."""
 
-    def __init__(self, cnf: CNF, seed: int = 0):
-        self.nvars = cnf.num_vars
-        self.clauses: List[List[int]] = [list(c) for c in cnf.clauses]
+    def __init__(self, cnf: Optional[CNF] = None, seed: int = 0):
+        self.nvars = 0
+        self.clauses: List[List[int]] = []
         self.stats = Stats()
         # assignment: 0 unassigned, +1 true, -1 false (indexed by var)
-        self.assign = [0] * (self.nvars + 1)
-        self.level = [0] * (self.nvars + 1)
-        self.reason: List[Optional[List[int]]] = [None] * (self.nvars + 1)
+        self.assign: List[int] = [0]
+        self.level: List[int] = [0]
+        self.reason: List[Optional[List[int]]] = [None]
+        self.phase: List[bool] = [True]
         self.trail: List[int] = []
         self.trail_lim: List[int] = []
         self.qhead = 0
         # watches: lit -> list of clauses watching lit
         self.watches: Dict[int, List[List[int]]] = {}
-        self.activity = [0.0] * (self.nvars + 1)
+        self.activity: List[float] = [0.0]
         self.var_inc = 1.0
         self.var_decay = 0.95
-        self.order: List[int] = list(range(1, self.nvars + 1))
         self._ok = True
-        self._init_watches()
+        self._model: Optional[List[int]] = None
+        if cnf is not None:
+            self.ensure_var(cnf.num_vars)
+            self.add_clauses(cnf.clauses)
 
-    # -- setup ---------------------------------------------------------------
+    # -- growth --------------------------------------------------------------
 
-    def _init_watches(self) -> None:
-        units: List[int] = []
-        for clause in self.clauses:
-            # de-dup and tautology check
-            s = set(clause)
-            if any(-l in s for l in s):
+    def ensure_var(self, v: int) -> None:
+        while self.nvars < v:
+            self.nvars += 1
+            self.assign.append(0)
+            self.level.append(0)
+            self.reason.append(None)
+            self.phase.append(True)
+            self.activity.append(0.0)
+
+    def add_clauses(self, clauses: Iterable[Sequence[int]]) -> bool:
+        """Append clauses, preserving learned clauses and heuristic state.
+
+        Returns False if the instance became root-level UNSAT.  Any
+        in-progress assignment above the root level is undone (callers add
+        clauses between :meth:`solve` calls, never mid-search).
+        """
+        self._backtrack(0)
+        for raw in clauses:
+            self.stats.clauses_added += 1
+            lits = set(raw)
+            if any(-l in lits for l in lits):
+                continue  # tautology
+            for l in lits:
+                self.ensure_var(abs(l))
+            # root-level simplification: drop satisfied clauses, strip
+            # falsified literals (root assignments are permanent)
+            clause: List[int] = []
+            satisfied = False
+            for l in lits:
+                v = self._value(l)
+                if v > 0:
+                    satisfied = True
+                    break
+                if v == 0:
+                    clause.append(l)
+            if satisfied:
                 continue
-            clause[:] = list(s)
-            if len(clause) == 0:
+            if not clause:
                 self._ok = False
-                return
+                return False
             if len(clause) == 1:
-                units.append(clause[0])
-                continue
-            self._watch(clause)
-        for u in units:
-            if self.assign[abs(u)] == 0:
-                self._enqueue(u, None)
-            elif self._value(u) < 0:
-                self._ok = False
-                return
+                self._enqueue(clause[0], None)
+            else:
+                self.clauses.append(clause)
+                self._watch(clause)
+        if self._ok and self._propagate() is not None:
+            self._ok = False
+        return self._ok
 
     def _watch(self, clause: List[int]) -> None:
         self.watches.setdefault(clause[0], []).append(clause)
@@ -211,6 +255,7 @@ class CDCLSolver:
         limit = self.trail_lim[level]
         for lit in self.trail[limit:]:
             v = abs(lit)
+            self.phase[v] = self.assign[v] > 0  # phase saving
             self.assign[v] = 0
             self.reason[v] = None
         del self.trail[limit:]
@@ -219,38 +264,76 @@ class CDCLSolver:
 
     def _decide(self) -> int:
         best, besta = 0, -1.0
-        for v in self.order:
-            if self.assign[v] == 0 and self.activity[v] > besta:
-                best, besta = v, self.activity[v]
+        activity = self.activity
+        assign = self.assign
+        for v in range(1, self.nvars + 1):
+            if assign[v] == 0 and activity[v] > besta:
+                best, besta = v, activity[v]
         return best
 
     # -- main loop -------------------------------------------------------------
 
     def solve(self, timeout_s: Optional[float] = None,
-              max_conflicts: Optional[int] = None) -> str:
+              max_conflicts: Optional[int] = None,
+              assumptions: Sequence[int] = ()) -> str:
+        """Solve the current clause set under ``assumptions``.
+
+        Learned clauses, watch lists, VSIDS activity and saved phases
+        persist across calls; assumptions are asserted as scoped decisions
+        and fully undone before returning.  ``max_conflicts`` bounds this
+        call, not the solver lifetime.
+        """
         t0 = time.monotonic()
+        self.stats.solve_calls += 1
+        conflicts_at_entry = self.stats.conflicts
+        for a in assumptions:
+            self.ensure_var(abs(a))
+        self._backtrack(0)
+
+        def finish(res: str) -> str:
+            self.stats.time_s = time.monotonic() - t0
+            if res == SAT:
+                self._model = list(self.assign)
+            self._backtrack(0)
+            return res
+
         if not self._ok:
-            return UNSAT
-        conflict = self._propagate()
-        if conflict is not None:
-            return UNSAT
+            return finish(UNSAT)
+        if self._propagate() is not None:
+            self._ok = False
+            return finish(UNSAT)
         restart_idx = 0
         conflicts_until_restart = 100 * luby(0)
         while True:
             if timeout_s is not None and time.monotonic() - t0 > timeout_s:
-                self.stats.time_s = time.monotonic() - t0
-                return UNKNOWN
-            if max_conflicts is not None and self.stats.conflicts > max_conflicts:
-                self.stats.time_s = time.monotonic() - t0
-                return UNKNOWN
-            v = self._decide()
-            if v == 0:
-                self.stats.time_s = time.monotonic() - t0
-                return SAT
+                return finish(UNKNOWN)
+            if (max_conflicts is not None
+                    and self.stats.conflicts - conflicts_at_entry
+                    > max_conflicts):
+                return finish(UNKNOWN)
+            # next decision: first unmet assumption, else VSIDS choice
+            lit = 0
+            failed_assumption = False
+            for a in assumptions:
+                val = self._value(a)
+                if val > 0:
+                    continue
+                if val < 0:
+                    failed_assumption = True
+                else:
+                    lit = a
+                break
+            if failed_assumption:
+                # incompatible with the clause set given earlier assumptions
+                return finish(UNSAT)
+            if lit == 0:
+                v = self._decide()
+                if v == 0:
+                    return finish(SAT)
+                lit = v if self.phase[v] else -v
             self.stats.decisions += 1
             self.trail_lim.append(len(self.trail))
-            # phase saving could go here; default polarity: positive
-            self._enqueue(v, None)
+            self._enqueue(lit, None)
             while True:
                 conflict = self._propagate()
                 if conflict is None:
@@ -258,14 +341,15 @@ class CDCLSolver:
                 self.stats.conflicts += 1
                 conflicts_until_restart -= 1
                 if len(self.trail_lim) == 0:
-                    self.stats.time_s = time.monotonic() - t0
-                    return UNSAT
+                    self._ok = False
+                    return finish(UNSAT)
                 learnt, bt = self._analyze(conflict)
                 self._backtrack(bt)
                 self.stats.learned += 1
                 if len(learnt) == 1:
                     if self._value(learnt[0]) < 0:
-                        return UNSAT
+                        self._ok = False
+                        return finish(UNSAT)
                     if self.assign[abs(learnt[0])] == 0:
                         self._enqueue(learnt[0], None)
                 else:
@@ -281,7 +365,16 @@ class CDCLSolver:
                     break
 
     def model(self) -> Dict[int, bool]:
-        return {v: self.assign[v] > 0 for v in range(1, self.nvars + 1)}
+        """Model of the last SAT :meth:`solve` call (stable across later
+        :meth:`add_clauses`/UNSAT calls until the next SAT answer).  Raises
+        if no call has returned SAT yet."""
+        if self._model is None:
+            raise ValueError("no model available: no solve() call has "
+                             "returned SAT yet")
+        src = self._model
+        # vars added after the snapshot default to False
+        return {v: (src[v] > 0 if v < len(src) else False)
+                for v in range(1, self.nvars + 1)}
 
 
 def solve_cnf(cnf: CNF, timeout_s: Optional[float] = None,

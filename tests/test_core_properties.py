@@ -1,8 +1,15 @@
 """Property-based tests over the solver core's invariants."""
+import importlib.util
 import random
 
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional extra: pip install .[test]")
 from hypothesis import HealthCheck, given, settings, strategies as st
+
+HAS_Z3 = importlib.util.find_spec("z3") is not None
+needs_z3 = pytest.mark.skipif(not HAS_Z3,
+                              reason="optional extra: pip install .[z3]")
 
 from repro.cgra import make_grid
 from repro.core import (DFG, Edge, HeuristicConfig, MapperConfig, Node,
@@ -82,6 +89,7 @@ def test_asap_alap_sound(seed):
         assert ms.alap[e.src] < ms.alap[e.dst]
 
 
+@needs_z3
 @given(st.integers(0, 10_000))
 @settings(**SETTINGS())
 def test_mii_lower_bound_is_sound(seed):
@@ -135,6 +143,7 @@ def test_sat_never_worse_than_heuristic(seed):
         assert validate_mapping(heur.mapping) == []
 
 
+@needs_z3
 @given(st.integers(0, 10_000))
 @settings(**SETTINGS(8))
 def test_backends_agree(seed):
@@ -162,8 +171,9 @@ def test_symmetry_breaking_preserves_satisfiability(seed):
     kms = fold_kms(ms, ii)
     plain = KMSEncoding(dfg, kms, grid, symmetry_break=False)
     broken = KMSEncoding(dfg, kms, grid, symmetry_break=True)
-    s1, _, _ = solve_z3(plain, timeout_s=20)
-    s2, _, _ = solve_z3(broken, timeout_s=20)
+    solve = solve_z3 if HAS_Z3 else solve_cdcl
+    s1, _, _ = solve(plain, timeout_s=20)
+    s2, _, _ = solve(broken, timeout_s=20)
     assert s1 == s2
 
 

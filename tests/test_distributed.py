@@ -12,6 +12,8 @@ import textwrap
 
 import pytest
 
+pytest.importorskip("jax", reason="optional extra: pip install .[jax]")
+
 SELF = os.path.abspath(__file__)
 
 
@@ -65,7 +67,7 @@ def test_train_two_steps_sharded_loss_decreases_finite():
         data = SyntheticLM(DataConfig(vocab_size=cfg.vocab_size, seq_len=16,
                                       global_batch=8))
         step = make_train_step(model)
-        with jax.set_mesh(mesh):
+        with shd.set_mesh(mesh):
             pshard = shd.param_shardings(model.defs, mesh, "fsdp_tp")
             params = jax.device_put(params, pshard)
             jstep = jax.jit(step)
@@ -144,12 +146,13 @@ def test_compressed_psum_matches_exact_within_quantization():
         import jax, jax.numpy as jnp, numpy as np
         from jax.experimental.shard_map import shard_map
         from jax.sharding import PartitionSpec as P
+        from repro.parallel import sharding as shd
         from repro.parallel.collectives import compressed_psum
         mesh = jax.make_mesh((8,), ("data",))
         x = jax.random.normal(jax.random.PRNGKey(0), (8, 128, 16))
         def body(v):
             return compressed_psum(v[0], "data")
-        with jax.set_mesh(mesh):
+        with shd.set_mesh(mesh):
             approx = shard_map(body, mesh=mesh, in_specs=P("data"),
                                out_specs=P())(x)
         exact = x.sum(0)
@@ -164,6 +167,7 @@ def test_compressed_psum_matches_exact_within_quantization():
 def test_pipeline_executor_matches_sequential():
     out = run_worker("""
         import jax, jax.numpy as jnp, numpy as np
+        from repro.parallel import sharding as shd
         from repro.parallel.pipeline import pipeline_forward
         S, M, B, D = 4, 6, 2, 8
         mesh = jax.make_mesh((S,), ("stage",))
@@ -172,7 +176,7 @@ def test_pipeline_executor_matches_sequential():
         def stage_fn(w, x):
             return jnp.tanh(x @ w)
         micro = jax.random.normal(jax.random.PRNGKey(1), (M, B, D))
-        with jax.set_mesh(mesh):
+        with shd.set_mesh(mesh):
             run = pipeline_forward(mesh, stage_fn, ws, micro, S)
         # sequential reference
         ref = micro

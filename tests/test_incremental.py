@@ -1,0 +1,210 @@
+"""Incremental solving engine: CDCL unit tests + mapper cross-checks.
+
+The incremental path must be a pure optimization: same status, same final
+II, and a valid decoded mapping, while provably reusing the per-II
+encoding and solver session (counters in MapResult).
+"""
+import importlib.util
+
+import pytest
+
+from repro.cgra import make_grid
+from repro.cgra.programs import BENCHMARKS
+from repro.cgra.simulator import map_for_execution
+from repro.core import MapperConfig, validate_mapping
+from repro.sat import CDCLSolver, CNF
+from repro.sat.cdcl import luby
+
+HAS_Z3 = importlib.util.find_spec("z3") is not None
+
+BACKENDS = ["cdcl"] + (["z3"] if HAS_Z3 else [])
+
+# small kernels so the cross-check stays fast on the pure-Python backend;
+# gsm@2x2 is the CEGAR-active case (assembler rejects its first mapping)
+KERNELS = [("bitcount", 2), ("reversebits", 2), ("gsm", 2),
+           ("stringsearch", 2), ("sqrt", 3)]
+
+
+# ---------------------------------------------------------------------------
+# CDCL solver unit tests
+# ---------------------------------------------------------------------------
+
+
+def test_luby_sequence():
+    assert [luby(i) for i in range(15)] == \
+        [1, 1, 2, 1, 1, 2, 4, 1, 1, 2, 1, 1, 2, 4, 8]
+
+
+def _pigeonhole(holes: int) -> CNF:
+    """holes+1 pigeons into `holes` holes — UNSAT, forces real learning."""
+    cnf = CNF()
+    n = holes + 1
+    var = {(p, h): cnf.new_var() for p in range(n) for h in range(holes)}
+    for p in range(n):
+        cnf.add_clause([var[(p, h)] for h in range(holes)])
+    for h in range(holes):
+        for p1 in range(n):
+            for p2 in range(p1 + 1, n):
+                cnf.add_clause((-var[(p1, h)], -var[(p2, h)]))
+    return cnf
+
+
+def test_learned_clauses_survive_add_clauses():
+    cnf = _pigeonhole(4)
+    del cnf.clauses[0]  # drop pigeon 0's at-least-one clause -> SAT
+    s = CDCLSolver(cnf)
+    assert s.solve(timeout_s=30) == "sat"
+    learned_before = s.stats.learned
+    assert learned_before > 0
+    db_before = len(s.clauses)
+    model = s.model()
+    blocking = tuple(-v if model[v] else v for v in range(1, s.nvars + 1))
+    assert s.add_clauses([blocking])
+    # learned clauses and clause DB intact, new clause appended
+    assert s.stats.learned == learned_before
+    assert len(s.clauses) == db_before + 1
+    res = s.solve(timeout_s=30)
+    assert res in ("sat", "unsat")
+    if res == "sat":
+        assert s.model() != model
+
+
+def test_add_clauses_can_flip_to_unsat_and_stays_unsat():
+    cnf = CNF()
+    cnf.ensure_var(2)
+    cnf.extend([(1, 2)])
+    s = CDCLSolver(cnf)
+    assert s.solve() == "sat"
+    assert not s.add_clauses([(-1,), (-2,)])
+    assert s.solve() == "unsat"
+    assert s.solve() == "unsat"  # terminal: stays unsat on re-query
+
+
+def test_incremental_blocking_matches_fresh_solver():
+    """Adding blocking clauses one at a time enumerates exactly the models
+    a fresh solver sees on the full CNF."""
+    base = [(1, 2, 3), (-1, -2), (-2, -3)]
+    s = CDCLSolver()
+    s.ensure_var(3)
+    s.add_clauses(base)
+    seen = []
+    while s.solve() == "sat":
+        m = s.model()
+        seen.append(tuple(sorted(v for v in (1, 2, 3) if m[v])))
+        s.add_clauses([tuple(-v if m[v] else v for v in (1, 2, 3))])
+        assert len(seen) < 10
+    # brute-force reference model count
+    ref = []
+    for a in range(8):
+        assign = {v: bool((a >> (v - 1)) & 1) for v in (1, 2, 3)}
+        if all(any(assign[abs(l)] == (l > 0) for l in c) for c in base):
+            ref.append(tuple(sorted(v for v in (1, 2, 3) if assign[v])))
+    assert sorted(seen) == sorted(ref)
+
+
+def test_assumptions_are_undone():
+    cnf = CNF()
+    cnf.ensure_var(4)
+    cnf.extend([(1, 2), (-1, 3), (-2, 4)])
+    s = CDCLSolver(cnf)
+    assert s.solve(assumptions=(-1,)) == "sat"
+    m = s.model()
+    assert not m[1] and m[2] and m[4]
+    # assumption gone: the opposite polarity is reachable again
+    assert s.solve(assumptions=(1,)) == "sat"
+    assert s.model()[1]
+    assert s.solve() == "sat"
+    # nothing about var 1 is permanently forced
+    assert s.assign[1] == 0
+
+
+def test_assumptions_unsat_does_not_poison_solver():
+    cnf = CNF()
+    cnf.ensure_var(3)
+    cnf.extend([(1, 2), (-1, 3), (-2, 3)])  # implies 3
+    s = CDCLSolver(cnf)
+    assert s.solve(assumptions=(-3,)) == "unsat"
+    assert s.solve() == "sat"               # still sat without assumptions
+    assert s.model()[3]
+    assert s.solve(assumptions=(-3,)) == "unsat"
+
+
+def test_unsat_instance_with_learning():
+    s = CDCLSolver(_pigeonhole(4))
+    assert s.solve(timeout_s=30) == "unsat"
+    assert s.stats.conflicts > 0
+
+
+def test_restarts_terminate():
+    """Regression: the Luby helper used to loop forever at index 1, hanging
+    any solve that reached its first restart."""
+    s = CDCLSolver(_pigeonhole(5))
+    res = s.solve(timeout_s=60)
+    assert res == "unsat"
+    assert s.stats.restarts >= 1
+
+
+# ---------------------------------------------------------------------------
+# mapper cross-checks: incremental == from-scratch
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("backend", BACKENDS)
+@pytest.mark.parametrize("name,size", KERNELS)
+def test_incremental_matches_cold(name, size, backend):
+    prog = BENCHMARKS[name]()
+    grid = make_grid(size, size)
+    results = {}
+    for inc in (False, True):
+        cfg = MapperConfig(backend=backend, incremental=inc,
+                           per_ii_timeout_s=30, total_timeout_s=60,
+                           ii_max=20)
+        results[inc] = map_for_execution(prog, grid, cfg)
+    cold, incr = results[False], results[True]
+    assert cold.status == incr.status
+    assert cold.ii == incr.ii
+    if incr.mapping is not None:
+        assert validate_mapping(incr.mapping) == []
+        # every solve consumed exactly one encoding in cold mode...
+        sat_unknown = [a for a in cold.attempts]
+        assert cold.encodings_built == len(sat_unknown)
+        assert cold.incremental_solves == 0
+        # ...while the incremental engine builds one encoding per II and
+        # re-solves CEGAR rounds on the warm session
+        distinct_iis = len({a.ii for a in incr.attempts})
+        assert incr.encodings_built == distinct_iis
+        assert incr.incremental_solves == len(incr.attempts) - distinct_iis
+
+
+def test_cegar_rounds_reuse_encoding():
+    """gsm on 2x2 is CEGAR-active: the assembler rejects the first mapping
+    (prologue clobber), so the same II is re-solved.  The re-solve must hit
+    the cached encoding, not a rebuild."""
+    prog = BENCHMARKS["gsm"]()
+    grid = make_grid(2, 2)
+    cfg = MapperConfig(backend="cdcl", per_ii_timeout_s=30,
+                       total_timeout_s=60)
+    res = map_for_execution(prog, grid, cfg)
+    assert res.status == "mapped"
+    assert res.cegar_rounds >= 1
+    assert len(res.attempts) >= 2
+    # one encoding for the single II attempted, despite multiple solves
+    assert res.encodings_built == 1
+    assert res.incremental_solves == len(res.attempts) - 1
+    assert res.attempts[0].incremental is False
+    assert all(a.incremental for a in res.attempts[1:])
+
+
+def test_construction_budget_enforced():
+    """total_timeout_s now covers Python-side encoding construction: an
+    absurdly small budget must yield status 'timeout', not a long stall."""
+    import time
+    from repro.cgra.programs import synthetic_dfg
+    from repro.core import map_dfg
+    dfg = synthetic_dfg("hotspot")  # 67 nodes — encoding is the cost
+    grid = make_grid(4, 4)
+    t0 = time.monotonic()
+    res = map_dfg(dfg, grid, MapperConfig(backend="cdcl",
+                                          total_timeout_s=0.05))
+    assert res.status == "timeout"
+    assert time.monotonic() - t0 < 10.0

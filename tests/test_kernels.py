@@ -4,6 +4,9 @@ The Pallas kernel runs in interpret mode (CPU container; TPU is the target).
 """
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional extra: pip install .[test]")
+pytest.importorskip("jax", reason="optional extra: pip install .[jax]")
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 import jax.numpy as jnp

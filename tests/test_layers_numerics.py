@@ -1,10 +1,13 @@
 """Numerical contracts of the custom layers: flash-attention custom VJP,
 fused cross-entropy, MoE dispatch vs dense oracle, SSD chunked-vs-decode
 consistency."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis", reason="optional extra: pip install .[test]")
+pytest.importorskip("jax", reason="optional extra: pip install .[jax]")
+import jax
+import jax.numpy as jnp
 from hypothesis import HealthCheck, given, settings, strategies as st
 
 import repro.models.losses as losses

@@ -1,9 +1,11 @@
 """Per-architecture smoke tests: reduced configs, one forward + one train
 step + one decode step on CPU; shape and finiteness checks."""
-import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
+
+pytest.importorskip("jax", reason="optional extra: pip install .[jax]")
+import jax
+import jax.numpy as jnp
 
 from repro.configs import ARCH_IDS, get_smoke
 from repro.configs.base import RunConfig

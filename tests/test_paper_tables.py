@@ -5,6 +5,8 @@ computation of §4.1, and the satisfying assignment printed at the end of
 §4.2 (which must satisfy our constraint system — including the back-edge
 cases where the printed Eq. 18 is inconsistent with the paper's own model).
 """
+import importlib.util
+
 import pytest
 
 from repro.core import (KMSEncoding, MapperConfig, Mapping, Placement,
@@ -123,7 +125,12 @@ def test_paper_assignment_backedge_labels(dfg, ms):
     assert separation(mapping, back[0]) == 2
 
 
-@pytest.mark.parametrize("backend", ["z3", "cdcl"])
+@pytest.mark.parametrize("backend", [
+    pytest.param("z3", marks=pytest.mark.skipif(
+        importlib.util.find_spec("z3") is None,
+        reason="optional extra: pip install .[z3]")),
+    "cdcl",
+])
 def test_mapper_finds_ii3(dfg, backend):
     """Fig. 3/§4.2: a valid II=3 mapping exists on the 2x2 CGRA and the
     solver finds it at the first tried II (mII)."""
