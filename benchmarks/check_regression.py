@@ -1,0 +1,138 @@
+"""CI benchmark-regression gate: compare a fresh BENCH JSON to a baseline.
+
+  python benchmarks/check_regression.py CURRENT BASELINE [--time-tol 0.25]
+
+Two artifact shapes are understood:
+
+* ``benchmarks/incremental_solver.py`` row lists — rows are joined on
+  (cil, size, backend);
+* ``repro.dse`` sweep documents — points are joined on (kernel, size)
+  and the whole Pareto section must match exactly.
+
+Correctness fields (status, II, Pareto fronts, cross-check flags) must be
+identical — any drift hard-fails.  Wall-time fields are compared with a
+relative tolerance (default ±25%); points where both sides are faster
+than ``--time-floor`` seconds are skipped, since sub-second timings are
+noise-dominated on shared CI runners.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Dict, List, Tuple
+
+INC_HARD = ("status", "ii", "same_result", "all_same_result")
+INC_TIME = ("cold_s", "incremental_s")
+DSE_HARD = ("status", "ii", "utilization", "latency_cycles", "energy_nj",
+            "cegar_rounds")
+DSE_TIME = ("map_time_s",)
+
+
+class Gate:
+    def __init__(self, time_tol: float, time_floor: float):
+        self.time_tol = time_tol
+        self.time_floor = time_floor
+        self.errors: List[str] = []
+        self.checked = 0
+
+    def hard(self, where: str, field: str, cur, base) -> None:
+        self.checked += 1
+        if cur != base:
+            self.errors.append(
+                f"{where}: {field} changed {base!r} -> {cur!r}")
+
+    def timed(self, where: str, field: str, cur, base) -> None:
+        if cur is None or base is None:
+            return
+        self.checked += 1
+        if max(cur, base) < self.time_floor:
+            return
+        ref = max(abs(base), 1e-9)
+        if abs(cur - base) / ref > self.time_tol:
+            self.errors.append(
+                f"{where}: {field} {base}s -> {cur}s exceeds "
+                f"±{self.time_tol:.0%}")
+
+
+def _index_rows(rows: List[Dict]) -> Dict[Tuple, Dict]:
+    return {(r.get("cil"), r.get("size"), r.get("backend")): r
+            for r in rows}
+
+
+def check_incremental(cur: List[Dict], base: List[Dict], gate: Gate) -> None:
+    cur_ix, base_ix = _index_rows(cur), _index_rows(base)
+    missing = sorted(set(map(str, base_ix)) - set(map(str, cur_ix)))
+    if missing:
+        gate.errors.append(f"incremental_solver: rows missing: {missing}")
+    for key, b in base_ix.items():
+        c = cur_ix.get(key)
+        if c is None:
+            continue
+        where = "incremental_solver" + str(key)
+        for f in INC_HARD:
+            if f in b:
+                gate.hard(where, f, c.get(f), b.get(f))
+        for f in INC_TIME:
+            if f in b:
+                gate.timed(where, f, c.get(f), b.get(f))
+
+
+def check_dse(cur: Dict, base: Dict, gate: Gate) -> None:
+    cur_pts = {(p["kernel"], p["size"]): p for p in cur.get("points", [])}
+    base_pts = {(p["kernel"], p["size"]): p for p in base.get("points", [])}
+    missing = sorted(str(k) for k in set(base_pts) - set(cur_pts))
+    if missing:
+        gate.errors.append(f"dse: points missing: {missing}")
+    for key, b in base_pts.items():
+        c = cur_pts.get(key)
+        if c is None:
+            continue
+        where = "dse" + str(key)
+        for f in DSE_HARD:
+            if f in b:
+                gate.hard(where, f, c.get(f), b.get(f))
+        for f in DSE_TIME:
+            gate.timed(where, f, c.get(f), b.get(f))
+    gate.hard("dse", "pareto",
+              json.dumps(cur.get("pareto"), sort_keys=True),
+              json.dumps(base.get("pareto"), sort_keys=True))
+    gate.timed("dse", "wall_time_s", cur.get("wall_time_s"),
+               base.get("wall_time_s"))
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--time-tol", type=float, default=0.25,
+                    help="relative wall-time tolerance (default 0.25)")
+    ap.add_argument("--time-floor", type=float, default=1.0,
+                    help="skip time checks when both sides are below this "
+                         "many seconds (noise floor)")
+    args = ap.parse_args(argv)
+    with open(args.current) as fh:
+        cur = json.load(fh)
+    with open(args.baseline) as fh:
+        base = json.load(fh)
+    gate = Gate(args.time_tol, args.time_floor)
+    if isinstance(base, dict) and base.get("bench") == "dse":
+        check_dse(cur, base, gate)
+    elif isinstance(base, list):
+        check_incremental(cur, base, gate)
+    else:
+        print(f"unrecognized baseline shape in {args.baseline}",
+              file=sys.stderr)
+        return 2
+    print(f"checked {gate.checked} fields against {args.baseline}")
+    if gate.errors:
+        print("REGRESSIONS:", file=sys.stderr)
+        for e in gate.errors:
+            print(f"  {e}", file=sys.stderr)
+        return 1
+    print("no regressions")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

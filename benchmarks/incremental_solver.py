@@ -142,10 +142,17 @@ def main(out="results/incremental_solver.json", backends=None, smoke=False):
 
 
 if __name__ == "__main__":
-    import sys
-    smoke = "--smoke" in sys.argv
-    backends = ["cdcl"] if smoke else None
-    rows = main(backends=backends, smoke=smoke)
-    if smoke:
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    # smoke writes its own artifact so it never clobbers the committed
+    # full-sweep baseline the CI regression gate compares against
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+    out = args.out or ("results/incremental_solver_smoke.json"
+                       if args.smoke else "results/incremental_solver.json")
+    backends = ["cdcl"] if args.smoke else None
+    rows = main(out=out, backends=backends, smoke=args.smoke)
+    if args.smoke:
         bad = [r for r in rows if r.get("same_result") is False]
         assert not bad, f"incremental/cold mismatch: {bad}"

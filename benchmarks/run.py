@@ -5,16 +5,20 @@
                     Fig. 11 (Pareto pruning), executed on the JAX simulator
   solver_opts     — beyond-paper SAT encoding/symmetry ablations
   incremental_solver — incremental vs cold-rebuild mapping engine
+  dse             — design-space sweep (kernels x CGRA sizes, repro.dse)
   roofline_table  — §Roofline from the multi-pod dry-run sweep
 
 Prints ``name,us_per_call,derived`` CSV per the harness convention and
-writes JSON artifacts under results/.
+writes JSON artifacts under results/.  A lane that raises is reported as
+``failed`` and the run exits non-zero so CI catches breakage instead of
+silently continuing.
 """
 from __future__ import annotations
 
 import os
 import sys
 import time
+import traceback
 
 
 def _run(name, fn):
@@ -24,60 +28,101 @@ def _run(name, fn):
     return name, dt, out
 
 
-def main() -> None:
+def main() -> int:
     os.makedirs("results", exist_ok=True)
     rows = []
+    failures = []
+
+    def lane(name, fn):
+        """Run one benchmark lane; a raising lane fails the whole run
+        (non-zero exit) but the remaining lanes still execute."""
+        try:
+            fn()
+        except Exception:
+            traceback.print_exc()
+            failures.append(name)
+            rows.append((name, 0.0, "FAILED"))
 
     import json
     reuse = os.environ.get("REPRO_BENCH_REUSE") == "1"
 
-    from . import fig7_table4
-    if reuse and os.path.exists("results/fig7_table4.json"):
-        d = json.load(open("results/fig7_table4.json"))
-        name, dt, summary = "fig7_table4(cached)", 0.0, d["summary"]
-    else:
-        name, dt, (_, summary) = _run("fig7_table4", fig7_table4.main)
-    rows.append((name, dt, f"sat_at_mii={summary['sat_at_mii']}/"
-                 f"{summary['cells']};sat_only="
-                 f"{summary['sat_solves_where_heuristic_fails']}"))
+    def lane_fig7():
+        from . import fig7_table4
+        if reuse and os.path.exists("results/fig7_table4.json"):
+            d = json.load(open("results/fig7_table4.json"))
+            name, dt, summary = "fig7_table4(cached)", 0.0, d["summary"]
+        else:
+            name, dt, (_, summary) = _run("fig7_table4", fig7_table4.main)
+        rows.append((name, dt, f"sat_at_mii={summary['sat_at_mii']}/"
+                     f"{summary['cells']};sat_only="
+                     f"{summary['sat_solves_where_heuristic_fails']}"))
 
-    from . import table7_8_runtime
-    if reuse and os.path.exists("results/table7_8.json"):
-        d = json.load(open("results/table7_8.json"))
-        name, dt, bench_rows, pa = "table7_8(cached)", 0.0, d["rows"], d["pareto"]
-    else:
-        name, dt, (bench_rows, pa) = _run("table7_8", table7_8_runtime.main)
-    verified = sum(1 for r in bench_rows if r.get("verified"))
-    rows.append((name, dt,
-                 f"verified={verified};pareto_cover="
-                 f"{pa['runtime_pareto_covered_by_compiler']};"
-                 f"pruning={pa['pruning_factor']}"))
+    def lane_table7_8():
+        from . import table7_8_runtime
+        if reuse and os.path.exists("results/table7_8.json"):
+            d = json.load(open("results/table7_8.json"))
+            name, dt, bench_rows, pa = ("table7_8(cached)", 0.0,
+                                        d["rows"], d["pareto"])
+        else:
+            name, dt, (bench_rows, pa) = _run("table7_8",
+                                              table7_8_runtime.main)
+        verified = sum(1 for r in bench_rows if r.get("verified"))
+        rows.append((name, dt,
+                     f"verified={verified};pareto_cover="
+                     f"{pa['runtime_pareto_covered_by_compiler']};"
+                     f"pruning={pa['pruning_factor']}"))
 
-    from . import solver_opts
-    name, dt, srows = _run("solver_opts", solver_opts.main)
-    agree = sum(1 for r in srows if r["same_ii_as_baseline"])
-    rows.append((name, dt, f"ii_agreement={agree}/{len(srows)}"))
+    def lane_solver_opts():
+        from . import solver_opts
+        name, dt, srows = _run("solver_opts", solver_opts.main)
+        agree = sum(1 for r in srows if r["same_ii_as_baseline"])
+        rows.append((name, dt, f"ii_agreement={agree}/{len(srows)}"))
 
-    from . import incremental_solver
-    name, dt, irows = _run("incremental_solver", incremental_solver.main)
-    summaries = [r for r in irows if r.get("cil") == "geomean"]
+    def lane_incremental():
+        from . import incremental_solver
+        name, dt, irows = _run("incremental_solver", incremental_solver.main)
+        summaries = [r for r in irows if r.get("cil") == "geomean"]
 
-    def _fmt(r):
-        out = f"{r['backend']}={r['geomean_speedup']}x"
-        if r["geomean_speedup_cegar_active"] is not None:
-            out += f"(cegar={r['geomean_speedup_cegar_active']}x)"
-        return out
-    rows.append((name, dt, "speedup:" + ";".join(map(_fmt, summaries))))
+        def _fmt(r):
+            out = f"{r['backend']}={r['geomean_speedup']}x"
+            if r["geomean_speedup_cegar_active"] is not None:
+                out += f"(cegar={r['geomean_speedup_cegar_active']}x)"
+            return out
+        rows.append((name, dt, "speedup:" + ";".join(map(_fmt, summaries))))
 
-    from . import roofline_table
-    name, dt, recs = _run("roofline_table", roofline_table.main)
-    ok = sum(1 for r in recs if r["status"] == "ok")
-    rows.append((name, dt, f"cells_ok={ok}/{len(recs)}"))
+    def lane_dse():
+        from repro.dse.cli import run_smoke
+        name, dt, doc = _run("dse", run_smoke)
+        s = doc["pareto"]["summary"]
+        if doc["errors"]:
+            raise RuntimeError(f"dse sweep had {doc['errors']} error points")
+        rows.append((name, dt,
+                     f"mapped={s['mapped_points']};retained="
+                     f"{s['mean_retained_fraction']};pruned="
+                     f"{s['mean_pruned_fraction']};cache_hits="
+                     f"{doc['cache']['hits']}"))
+
+    def lane_roofline():
+        from . import roofline_table
+        name, dt, recs = _run("roofline_table", roofline_table.main)
+        ok = sum(1 for r in recs if r["status"] == "ok")
+        rows.append((name, dt, f"cells_ok={ok}/{len(recs)}"))
+
+    lane("fig7_table4", lane_fig7)
+    lane("table7_8", lane_table7_8)
+    lane("solver_opts", lane_solver_opts)
+    lane("incremental_solver", lane_incremental)
+    lane("dse", lane_dse)
+    lane("roofline_table", lane_roofline)
 
     print("\nname,us_per_call,derived")
     for name, dt, derived in rows:
         print(f"{name},{dt:.0f},{derived}")
+    if failures:
+        print(f"\nFAILED lanes: {', '.join(failures)}", file=sys.stderr)
+        return 1
+    return 0
 
 
 if __name__ == '__main__':
-    main()
+    sys.exit(main())

@@ -53,6 +53,15 @@ class AssembledCIL:
     def kernel_words(self) -> np.ndarray:
         return encode_program(self.kernel)
 
+    def op_counts(self) -> Dict[str, int]:
+        """Executed-op histogram over the unrolled schedule (NOPs included)
+        — the dynamic-energy input for ``repro.cgra.energy``."""
+        counts: Dict[str, int] = {}
+        for row in self.rows:
+            for ins in row:
+                counts[ins.op] = counts.get(ins.op, 0) + 1
+        return counts
+
 
 def _direction(grid: PEGrid, me: int, neighbor: int) -> int:
     """Source selector for reading ``neighbor``'s OUT from PE ``me``."""

@@ -39,10 +39,22 @@ class RuntimeMetrics:
     energy_nj: float
     ii: int
     utilization: float
+    dynamic_nj: float = 0.0    # per-op switching energy
+    static_nj: float = 0.0     # leakage/clock, scales with PEs x cycles
 
     @property
     def latency_us_at_100mhz(self) -> float:
         return self.cycles / 100.0
+
+    def to_dict(self) -> Dict[str, float]:
+        return {
+            "cycles": self.cycles,
+            "energy_nj": round(self.energy_nj, 4),
+            "dynamic_nj": round(self.dynamic_nj, 4),
+            "static_nj": round(self.static_nj, 4),
+            "ii": self.ii,
+            "utilization": round(self.utilization, 4),
+        }
 
 
 def row_latency(row, num_cols: int) -> int:
@@ -64,14 +76,21 @@ def row_latency(row, num_cols: int) -> int:
 
 def runtime_metrics(asm: AssembledCIL, num_cols: int,
                     utilization: float) -> RuntimeMetrics:
-    cycles = 0
-    energy = 0.0
-    num_pes = asm.num_pes
-    for row in asm.rows:
-        c = row_latency(row, num_cols)
-        cycles += c
-        energy += c * num_pes * STATIC_PJ_PER_PE_CYCLE
-        for ins in row:
-            energy += OP_ENERGY.get(ins.op, _DEFAULT_OP_ENERGY)
-    return RuntimeMetrics(cycles=cycles, energy_nj=energy / 1000.0,
-                          ii=asm.ii, utilization=utilization)
+    cycles = sum(row_latency(row, num_cols) for row in asm.rows)
+    dynamic = sum(count * OP_ENERGY.get(op, _DEFAULT_OP_ENERGY)
+                  for op, count in sorted(asm.op_counts().items()))
+    static = cycles * asm.num_pes * STATIC_PJ_PER_PE_CYCLE
+    return RuntimeMetrics(cycles=cycles,
+                          energy_nj=(dynamic + static) / 1000.0,
+                          ii=asm.ii, utilization=utilization,
+                          dynamic_nj=dynamic / 1000.0,
+                          static_nj=static / 1000.0)
+
+
+def metrics_for_mapping(program, mapping) -> RuntimeMetrics:
+    """Assemble ``mapping`` and run the calibrated model — the one-call
+    metrics path used by the DSE sweep (no JAX execution involved)."""
+    from .bitstream import assemble
+    asm = assemble(program, mapping)
+    return runtime_metrics(asm, num_cols=mapping.grid.spec.cols,
+                           utilization=mapping.utilization)

@@ -6,7 +6,8 @@ from .sat_encoding import EncodingBudgetExceeded, KMSEncoding
 from .backends import (CDCLSession, SolverSession, Z3Session, make_session,
                        resolve_backend)
 from .mapping import Mapping, Placement, validate_mapping
-from .mapper import IIAttempt, MapperConfig, MapResult, map_dfg
+from .mapper import (IIAttempt, MapperConfig, MapResult, map_dfg,
+                     map_dfg_cached, mapping_cache_key)
 from .baseline_ims import HeuristicConfig, map_dfg_heuristic
 from .regalloc import allocate_registers
 
@@ -19,6 +20,7 @@ __all__ = [
     "resolve_backend",
     "Mapping", "Placement", "validate_mapping",
     "MapperConfig", "MapResult", "IIAttempt", "map_dfg",
+    "map_dfg_cached", "mapping_cache_key",
     "HeuristicConfig", "map_dfg_heuristic",
     "allocate_registers",
 ]

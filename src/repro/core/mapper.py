@@ -19,6 +19,9 @@ Python-side encoding/CNF construction too (via a deadline threaded into
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
+import json
 import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional
@@ -76,6 +79,37 @@ class MapResult:
     @property
     def ii(self) -> Optional[int]:
         return self.mapping.ii if self.mapping else None
+
+    # -- serialization (content-addressed mapping cache, repro.dse) ------------
+
+    def to_dict(self) -> Dict:
+        d = {
+            "status": self.status,
+            "mii": self.mii,
+            "total_time_s": self.total_time_s,
+            "validation_errors": list(self.validation_errors),
+            "backend": self.backend,
+            "encodings_built": self.encodings_built,
+            "incremental_solves": self.incremental_solves,
+            "cegar_rounds": self.cegar_rounds,
+            "attempts": [dataclasses.asdict(a) for a in self.attempts],
+            "mapping": self.mapping.to_dict() if self.mapping else None,
+        }
+        return d
+
+    @classmethod
+    def from_dict(cls, dfg: DFG, grid: PEGrid, d: Dict) -> "MapResult":
+        mapping = (Mapping.from_dict(dfg, grid, d["mapping"])
+                   if d.get("mapping") else None)
+        return cls(
+            mapping=mapping, status=d["status"], mii=d["mii"],
+            attempts=[IIAttempt(**a) for a in d.get("attempts", [])],
+            total_time_s=d.get("total_time_s", 0.0),
+            validation_errors=list(d.get("validation_errors", [])),
+            backend=d.get("backend", ""),
+            encodings_built=d.get("encodings_built", 0),
+            incremental_solves=d.get("incremental_solves", 0),
+            cegar_rounds=d.get("cegar_rounds", 0))
 
 
 def _extract_mapping(dfg: DFG, grid: PEGrid, kms, enc: KMSEncoding,
@@ -199,3 +233,67 @@ def map_dfg(dfg: DFG, grid: PEGrid,
         ii += 1
     result.total_time_s = time.monotonic() - t_start
     return result
+
+
+def mapping_cache_key(dfg: DFG, grid: PEGrid,
+                      config: Optional[MapperConfig] = None,
+                      extra: str = "") -> str:
+    """Content hash of everything that determines ``map_dfg``'s output.
+
+    Covers the DFG (node ids + ops, edges with distance/kind), the
+    architecture (rows/cols/registers/torus) and every semantics-affecting
+    :class:`MapperConfig` field (``backend`` is resolved first so
+    ``"auto"`` and the backend it picks share cache entries).  ``extra``
+    tags out-of-band inputs the signature cannot see — e.g. which CEGAR
+    oracle (``assemble_check``) the caller wires in.  DFG/arch *names* are
+    deliberately excluded: the key addresses content, not labels.
+    """
+    cfg = config or MapperConfig()
+    cfg_key = {
+        "backend": resolve_backend(cfg.backend),
+        "amo": cfg.amo,
+        "per_ii_timeout_s": cfg.per_ii_timeout_s,
+        "total_timeout_s": cfg.total_timeout_s,
+        "ii_max": cfg.ii_max,
+        "symmetry_break": cfg.symmetry_break,
+        "on_timeout": cfg.on_timeout,
+        "max_cegar_rounds": cfg.max_cegar_rounds,
+        "incremental": cfg.incremental,
+        # `validate` is excluded: it checks the result, never changes it
+    }
+    payload = {
+        "v": 1,  # bump to invalidate every entry on schema/semantic change
+        "nodes": [[n.id, n.op] for n in
+                  (dfg.nodes[i] for i in dfg.node_ids())],
+        "edges": sorted([e.src, e.dst, e.distance, e.kind]
+                        for e in dfg.edges),
+        "arch": [grid.spec.rows, grid.spec.cols, grid.spec.num_regs,
+                 grid.spec.torus],
+        "config": cfg_key,
+        "extra": extra,
+    }
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode("utf-8")).hexdigest()
+
+
+def map_dfg_cached(dfg: DFG, grid: PEGrid,
+                   config: Optional[MapperConfig] = None,
+                   cache=None, assemble_check=None,
+                   cache_extra: str = ""):
+    """Cache-aware ``map_dfg``: returns ``(MapResult, cache_hit)``.
+
+    ``cache`` is any object with ``get(key) -> Optional[dict]`` /
+    ``put(key, dict)`` (see :class:`repro.dse.cache.MappingCache`).
+    Timeout results are never stored so a rerun with the same budget gets
+    another chance on a less-loaded machine.
+    """
+    key = None
+    if cache is not None:
+        key = mapping_cache_key(dfg, grid, config, extra=cache_extra)
+        stored = cache.get(key)
+        if stored is not None:
+            return MapResult.from_dict(dfg, grid, stored), True
+    res = map_dfg(dfg, grid, config, assemble_check=assemble_check)
+    if cache is not None and res.status != "timeout":
+        cache.put(key, res.to_dict())
+    return res, False

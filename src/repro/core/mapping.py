@@ -61,6 +61,32 @@ class Mapping:
         pl = self.placements[node]
         return pl.slot.c + self.stage(node) * self.ii
 
+    # -- serialization -----------------------------------------------------------
+
+    def to_dict(self) -> Dict:
+        """JSON-safe dict; handoffs are recomputed on load (derived data)."""
+        return {
+            "ii": self.ii,
+            "num_folds": self.num_folds,
+            "placements": [[p.node, p.pe, p.slot.c, p.slot.it]
+                           for p in sorted(self.placements.values(),
+                                           key=lambda p: p.node)],
+            "routing_nodes": self.routing_nodes,
+        }
+
+    @classmethod
+    def from_dict(cls, dfg: DFG, grid: PEGrid, d: Dict) -> "Mapping":
+        placements = {n: Placement(node=n, pe=pe, slot=Slot(c=c, it=it))
+                      for n, pe, c, it in d["placements"]}
+        mapping = cls(dfg=dfg, grid=grid, ii=d["ii"],
+                      num_folds=d["num_folds"], placements=placements,
+                      routing_nodes=d.get("routing_nodes", 0))
+        for e in dfg.edges:
+            if e.src in placements and e.dst in placements:
+                mapping.handoffs[(e.src, e.dst, e.distance)] = \
+                    classify_handoff(mapping, e)
+        return mapping
+
 
 def classify_handoff(mapping: Mapping, edge: Edge) -> str:
     if edge.kind == "flag":

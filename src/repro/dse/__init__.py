@@ -1,0 +1,16 @@
+"""Design-space exploration (paper §6-7): parallel kernel × CGRA-size
+sweeps, a content-addressed mapping cache, and Pareto pruning analysis."""
+from .cache import MappingCache
+from .pareto import dominates, kernel_pareto, pareto_analysis, pareto_front
+from .space import (DEFAULT_KERNELS, DEFAULT_SIZES, SMOKE_KERNELS,
+                    SMOKE_SIZES, DesignPoint, build_space, kernel_program,
+                    parse_sizes)
+from .sweep import SweepConfig, run_sweep
+
+__all__ = [
+    "MappingCache",
+    "dominates", "kernel_pareto", "pareto_analysis", "pareto_front",
+    "DEFAULT_KERNELS", "DEFAULT_SIZES", "SMOKE_KERNELS", "SMOKE_SIZES",
+    "DesignPoint", "build_space", "kernel_program", "parse_sizes",
+    "SweepConfig", "run_sweep",
+]

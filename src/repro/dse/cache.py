@@ -1,0 +1,78 @@
+"""Content-addressed on-disk mapping cache.
+
+Keys are SHA-256 hashes of (DFG content, architecture, MapperConfig,
+oracle tag) — computed by ``repro.core.mapper.mapping_cache_key`` — and
+values are ``MapResult.to_dict()`` JSON files, one per key, sharded by
+the first two hex digits.  Writes are atomic (tempfile + ``os.replace``)
+so a crashed or concurrent sweep never leaves a half-written entry; a
+corrupt entry reads as a miss and is dropped.  The cache makes repeated
+sweeps and the CI smoke lane near-free: every hit skips the SAT solve
+entirely and replays the stored mapping.
+"""
+from __future__ import annotations
+
+import json
+import os
+import tempfile
+from typing import Dict, Optional
+
+SCHEMA = 1
+
+
+class MappingCache:
+    def __init__(self, root: str):
+        self.root = root
+        self.hits = 0
+        self.misses = 0
+        os.makedirs(root, exist_ok=True)
+
+    def _path(self, key: str) -> str:
+        return os.path.join(self.root, key[:2], f"{key}.json")
+
+    def get(self, key: str) -> Optional[Dict]:
+        path = self._path(key)
+        try:
+            with open(path) as fh:
+                entry = json.load(fh)
+            if entry.get("schema") != SCHEMA:
+                raise ValueError("stale cache schema")
+            result = entry["result"]  # before counting: may be corrupt
+            self.hits += 1
+            return result
+        except FileNotFoundError:
+            self.misses += 1
+            return None
+        except (ValueError, KeyError, OSError):
+            # corrupt / stale entry: drop it and treat as a miss
+            self.misses += 1
+            try:
+                os.remove(path)
+            except OSError:
+                pass
+            return None
+
+    def put(self, key: str, result: Dict) -> None:
+        path = self._path(key)
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(path),
+                                   suffix=".tmp")
+        try:
+            with os.fdopen(fd, "w") as fh:
+                json.dump({"schema": SCHEMA, "key": key, "result": result},
+                          fh, sort_keys=True)
+            os.replace(tmp, path)
+        except BaseException:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            raise
+
+    def stats(self) -> Dict:
+        return {"dir": self.root, "hits": self.hits, "misses": self.misses}
+
+    def __len__(self) -> int:
+        n = 0
+        for _, _, files in os.walk(self.root):
+            n += sum(1 for f in files if f.endswith(".json"))
+        return n

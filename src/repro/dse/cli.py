@@ -1,0 +1,127 @@
+"""``python -m repro.dse`` — run a design-space sweep from the shell.
+
+Smoke mode (CI): 3 kernels × 3 grid sizes on the dependency-free CDCL
+backend, run **twice** against the same cache — the second pass must be
+all cache hits and must reproduce the first pass's Pareto sections
+byte-for-byte (``repeat_check`` in the emitted JSON records both).  The
+default artifact is ``results/BENCH_dse.json`` plus a markdown Pareto
+table next to it.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+from typing import List, Optional
+
+from .report import markdown_report
+from .space import (DEFAULT_KERNELS, DEFAULT_SIZES, SMOKE_KERNELS,
+                    SMOKE_SIZES, parse_sizes)
+from .sweep import SweepConfig, run_sweep
+
+# the smoke artifact doubles as the committed CI regression baseline; the
+# full sweep writes elsewhere so routine runs never clobber the baseline
+SMOKE_OUT = "results/BENCH_dse.json"
+DEFAULT_OUT = "results/dse.json"
+
+
+def pareto_bytes(doc: dict) -> bytes:
+    """Canonical serialization of the Pareto sections (the byte-identity
+    contract of the CI gate — excludes wall times and cache counters)."""
+    stable = {
+        "pareto": doc["pareto"],
+        "fronts": [{k: row.get(k) for k in
+                    ("kernel", "size", "status", "ii", "utilization",
+                     "latency_cycles", "energy_nj")}
+                   for row in doc["points"]],
+    }
+    return json.dumps(stable, sort_keys=True,
+                      separators=(",", ":")).encode("utf-8")
+
+
+def run_smoke(out: str = SMOKE_OUT, jobs: Optional[int] = None,
+              cache_dir: str = "results/dse_cache") -> dict:
+    """The CI lane: sweep twice, assert cache reuse + determinism."""
+    cfg = SweepConfig(kernels=SMOKE_KERNELS, sizes=SMOKE_SIZES,
+                      backend="cdcl", per_point_timeout_s=30.0,
+                      per_ii_timeout_s=10.0, jobs=jobs,
+                      cache_dir=cache_dir)
+    first = run_sweep(cfg)
+    second = run_sweep(cfg)
+    identical = pareto_bytes(first) == pareto_bytes(second)
+    second["repeat_check"] = {
+        "cache_hits_second_run": second["cache"]["hits"],
+        "pareto_identical": identical,
+        "first_run_wall_s": first["wall_time_s"],
+    }
+    _emit(second, out)
+    if not identical:
+        raise AssertionError("repeated sweep changed the Pareto sections")
+    if second["cache"]["hits"] == 0:
+        raise AssertionError("repeated sweep did not hit the mapping cache")
+    return second
+
+
+def _emit(doc: dict, out: str) -> None:
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as fh:
+        json.dump(doc, fh, indent=1, sort_keys=True)
+    md = os.path.splitext(out)[0] + ".md"
+    with open(md, "w") as fh:
+        fh.write(markdown_report(doc))
+    for row in doc["points"]:
+        print("BENCH", json.dumps(dict(row, bench="dse")), flush=True)
+    print("BENCH", json.dumps({
+        "bench": "dse", "summary": doc["pareto"]["summary"],
+        "cache": doc["cache"], "errors": doc["errors"],
+        "wall_time_s": doc["wall_time_s"]}), flush=True)
+    print(f"wrote {out} and {md}")
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.dse",
+        description="Design-space exploration sweep (kernels x CGRA sizes)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI subset + repeated-run cache/determinism check")
+    ap.add_argument("--kernels", default=None,
+                    help="comma-separated kernel names "
+                         f"(default: {','.join(DEFAULT_KERNELS)})")
+    ap.add_argument("--sizes", default=None,
+                    help="comma-separated grid sizes, e.g. 2x2,3x3,4x4")
+    ap.add_argument("--backend", default="auto",
+                    choices=["auto", "cdcl", "z3"])
+    ap.add_argument("--jobs", type=int, default=None,
+                    help="worker processes (default: os.cpu_count())")
+    ap.add_argument("--timeout", type=float, default=60.0,
+                    help="per-point mapping budget in seconds")
+    ap.add_argument("--out", default=None,
+                    help=f"output JSON (default: {DEFAULT_OUT}; "
+                         f"--smoke: {SMOKE_OUT})")
+    ap.add_argument("--cache-dir", default="results/dse_cache")
+    ap.add_argument("--no-cache", action="store_true")
+    args = ap.parse_args(argv)
+
+    cache_dir = None if args.no_cache else args.cache_dir
+    if args.smoke:
+        if args.no_cache:
+            ap.error("--smoke needs the cache (its repeated run asserts "
+                     "cache hits); drop --no-cache")
+        doc = run_smoke(out=args.out or SMOKE_OUT, jobs=args.jobs,
+                        cache_dir=cache_dir)
+        return 1 if doc["errors"] else 0
+
+    cfg = SweepConfig(
+        kernels=(args.kernels.split(",") if args.kernels
+                 else DEFAULT_KERNELS),
+        sizes=parse_sizes(args.sizes) if args.sizes else DEFAULT_SIZES,
+        backend=args.backend, per_point_timeout_s=args.timeout,
+        jobs=args.jobs, cache_dir=cache_dir)
+    doc = run_sweep(cfg)
+    _emit(doc, args.out or DEFAULT_OUT)
+    return 1 if doc["errors"] else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,69 @@
+"""Design space for the paper's §6-7 exploration: kernels × CGRA sizes.
+
+A *design point* is one (CIL kernel, grid geometry) cell of the sweep.
+Kernels come from the Table-6 benchmark registry
+(``repro.cgra.programs.BENCHMARKS``); geometries default to the paper's
+2x2 → 6x6 ladder.  The smoke subsets are chosen so CI maps every point in
+seconds on the pure-Python CDCL backend with no z3/jax extras.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, List, Sequence, Tuple
+
+from ..cgra.programs import BENCHMARKS
+
+# full ladder (paper §7 sweeps square arrays; the rectangles probe the
+# per-column memory-port arbitration between them)
+DEFAULT_SIZES: Tuple[Tuple[int, int], ...] = (
+    (2, 2), (2, 3), (3, 3), (3, 4), (4, 4), (5, 5), (6, 6))
+DEFAULT_KERNELS: Tuple[str, ...] = tuple(BENCHMARKS)
+
+# CI smoke: 4 kernels × 3 sizes, each point sub-second under CDCL with no
+# extras; gsm@2x2 keeps a CEGAR-active point and sqrt@2x2 an UNSAT one in
+# the lane so both paths stay exercised
+SMOKE_SIZES: Tuple[Tuple[int, int], ...] = ((2, 2), (2, 3), (3, 3))
+SMOKE_KERNELS: Tuple[str, ...] = ("bitcount", "reversebits", "sqrt", "gsm")
+
+
+@dataclass(frozen=True)
+class DesignPoint:
+    kernel: str
+    rows: int
+    cols: int
+
+    @property
+    def size(self) -> str:
+        return f"{self.rows}x{self.cols}"
+
+    @property
+    def num_pes(self) -> int:
+        return self.rows * self.cols
+
+
+def parse_sizes(spec: str) -> List[Tuple[int, int]]:
+    """``"2x2,3x3"`` -> ``[(2, 2), (3, 3)]``."""
+    out = []
+    for tok in spec.split(","):
+        tok = tok.strip().lower()
+        if not tok:
+            continue
+        r, _, c = tok.partition("x")
+        out.append((int(r), int(c)))
+    return out
+
+
+def build_space(kernels: Sequence[str],
+                sizes: Iterable[Tuple[int, int]]) -> List[DesignPoint]:
+    """Cross product in deterministic (kernel-major) order."""
+    unknown = [k for k in kernels if k not in BENCHMARKS]
+    if unknown:
+        raise ValueError(
+            f"unknown kernels {unknown}; registered: {sorted(BENCHMARKS)}")
+    return [DesignPoint(kernel=k, rows=r, cols=c)
+            for k in kernels for (r, c) in sizes]
+
+
+def kernel_program(name: str):
+    """Instantiate the registered LoopBuilder for ``name``."""
+    return BENCHMARKS[name]()

@@ -1,0 +1,193 @@
+"""Parallel design-space sweep: map every kernel across every grid size.
+
+One sweep = a cross product of registered CIL kernels and CGRA
+geometries.  Cache hits (``MappingCache``) are resolved in the parent
+and skip solving entirely; misses fan out to a ``ProcessPoolExecutor``
+(``os.cpu_count()``-bounded, one mapper session per worker process) where
+each point runs the full incremental SAT mapping with the bitstream
+assembler as CEGAR oracle under a per-point ``total_timeout_s`` budget.
+Run-time metrics (latency cycles, energy) come from the calibrated model
+over the assembled instruction grid — no JAX required — so the whole
+sweep works with zero optional extras.
+
+Rows are emitted in deterministic kernel-major order and all floats are
+rounded on the way out, so identical inputs produce byte-identical
+Pareto sections (the property the CI regression gate checks).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from concurrent.futures import ProcessPoolExecutor
+from dataclasses import dataclass
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from ..cgra.arch import make_grid
+from ..cgra.energy import metrics_for_mapping
+from ..core.mapper import (MapperConfig, MapResult, map_dfg,
+                           mapping_cache_key, resolve_backend)
+from .cache import MappingCache
+from .pareto import pareto_analysis
+from .space import (DEFAULT_KERNELS, DEFAULT_SIZES, DesignPoint,
+                    build_space, kernel_program)
+
+# tags the CEGAR oracle wired into every sweep solve — part of the cache
+# key so plain `map_dfg` results can never alias oracle-checked ones
+ORACLE_TAG = "oracle=bitstream-prologue"
+
+
+@dataclass
+class SweepConfig:
+    kernels: Sequence[str] = DEFAULT_KERNELS
+    sizes: Sequence[Tuple[int, int]] = DEFAULT_SIZES
+    backend: str = "auto"
+    per_point_timeout_s: float = 60.0
+    per_ii_timeout_s: float = 15.0
+    ii_max: int = 32
+    jobs: Optional[int] = None          # None -> os.cpu_count(), capped
+    cache_dir: Optional[str] = "results/dse_cache"  # None disables caching
+
+    def mapper_config(self) -> MapperConfig:
+        return MapperConfig(backend=self.backend,
+                            per_ii_timeout_s=self.per_ii_timeout_s,
+                            total_timeout_s=self.per_point_timeout_s,
+                            ii_max=self.ii_max)
+
+
+def _solve_point(task: Tuple[str, int, int, Dict]) -> Dict:
+    """Worker: one (kernel, grid) SAT mapping with the assembler oracle.
+
+    Module-level (picklable) and self-contained: rebuilds the program,
+    grid and MapperConfig from plain values, returns plain dicts.
+    """
+    kernel, rows, cols, cfg_dict = task
+    from ..cgra.bitstream import PrologueClobber, assemble
+
+    program = kernel_program(kernel)
+    dfg = program.build_dfg()
+    grid = make_grid(rows, cols)
+    cfg = MapperConfig(**cfg_dict)
+
+    def check(mapping):
+        try:
+            assemble(program, mapping)
+        except PrologueClobber as e:
+            return e.triples
+        return None
+
+    t0 = time.monotonic()
+    try:
+        res = map_dfg(dfg, grid, cfg, assemble_check=check)
+    except Exception as e:  # surfaced as a per-point "error" row
+        return {"kernel": kernel, "rows": rows, "cols": cols,
+                "error": f"{type(e).__name__}: {e}",
+                "map_time_s": time.monotonic() - t0}
+    return {"kernel": kernel, "rows": rows, "cols": cols,
+            "result": res.to_dict(),
+            "map_time_s": time.monotonic() - t0}
+
+
+def _record(point: DesignPoint, res: MapResult, map_time_s: float,
+            cache_hit: bool, program) -> Dict:
+    row = {
+        "kernel": point.kernel, "size": point.size,
+        "rows": point.rows, "cols": point.cols,
+        "num_pes": point.num_pes,
+        "status": res.status, "mii": res.mii,
+        "backend": res.backend,
+        "map_time_s": round(map_time_s, 4),
+        "cache_hit": cache_hit,
+        "cegar_rounds": res.cegar_rounds,
+        "attempts": len(res.attempts),
+    }
+    if res.mapping is not None:
+        m = metrics_for_mapping(program, res.mapping)
+        row.update({
+            "ii": res.mapping.ii,
+            "utilization": round(res.mapping.utilization, 4),
+            "latency_cycles": m.cycles,
+            "energy_nj": round(m.energy_nj, 4),
+            "dynamic_nj": round(m.dynamic_nj, 4),
+            "static_nj": round(m.static_nj, 4),
+        })
+    else:
+        row["ii"] = None
+    return row
+
+
+def run_sweep(cfg: Optional[SweepConfig] = None) -> Dict:
+    """Execute the sweep; returns the full JSON-ready result document."""
+    cfg = cfg or SweepConfig()
+    t0 = time.monotonic()
+    points = build_space(cfg.kernels, cfg.sizes)
+    mcfg = cfg.mapper_config()
+    cfg_dict = dataclasses.asdict(mcfg)
+    cache = MappingCache(cfg.cache_dir) if cfg.cache_dir else None
+
+    # resolve cache hits up front; only misses go to the pool
+    results: Dict[DesignPoint, Tuple[MapResult, float, bool]] = {}
+    pending: List[DesignPoint] = []
+    keys: Dict[DesignPoint, str] = {}
+    programs = {k: kernel_program(k) for k in cfg.kernels}
+    for pt in points:
+        if cache is None:
+            pending.append(pt)
+            continue
+        dfg = programs[pt.kernel].build_dfg()
+        grid = make_grid(pt.rows, pt.cols)
+        keys[pt] = mapping_cache_key(dfg, grid, mcfg, extra=ORACLE_TAG)
+        stored = cache.get(keys[pt])
+        if stored is not None:
+            results[pt] = (MapResult.from_dict(dfg, grid, stored), 0.0, True)
+        else:
+            pending.append(pt)
+
+    errors: Dict[DesignPoint, Dict] = {}
+    if pending:
+        tasks = [(pt.kernel, pt.rows, pt.cols, cfg_dict) for pt in pending]
+        jobs = cfg.jobs if cfg.jobs is not None else (os.cpu_count() or 1)
+        jobs = max(1, min(jobs, len(tasks)))
+        if jobs == 1:
+            outs = [_solve_point(t) for t in tasks]
+        else:
+            with ProcessPoolExecutor(max_workers=jobs) as pool:
+                outs = list(pool.map(_solve_point, tasks))
+        for pt, out in zip(pending, outs):
+            if "error" in out:
+                errors[pt] = out
+                continue
+            dfg = programs[pt.kernel].build_dfg()
+            grid = make_grid(pt.rows, pt.cols)
+            res = MapResult.from_dict(dfg, grid, out["result"])
+            results[pt] = (res, out["map_time_s"], False)
+            if cache is not None and res.status != "timeout":
+                cache.put(keys[pt], out["result"])
+
+    rows: List[Dict] = []
+    for pt in points:  # deterministic kernel-major emission order
+        if pt in errors:
+            rows.append({"kernel": pt.kernel, "size": pt.size,
+                         "rows": pt.rows, "cols": pt.cols,
+                         "num_pes": pt.num_pes, "status": "error",
+                         "ii": None, "error": errors[pt]["error"],
+                         "map_time_s": round(errors[pt]["map_time_s"], 4),
+                         "cache_hit": False})
+            continue
+        res, dt, hit = results[pt]
+        rows.append(_record(pt, res, dt, hit, programs[pt.kernel]))
+
+    doc = {
+        "bench": "dse",
+        "backend": resolve_backend(cfg.backend),
+        "kernels": list(cfg.kernels),
+        "sizes": [f"{r}x{c}" for r, c in cfg.sizes],
+        "per_point_timeout_s": cfg.per_point_timeout_s,
+        "points": rows,
+        "pareto": pareto_analysis(rows),
+        "cache": (cache.stats() if cache is not None
+                  else {"dir": None, "hits": 0, "misses": 0}),
+        "errors": len(errors),
+        "wall_time_s": round(time.monotonic() - t0, 3),
+    }
+    return doc

@@ -1,0 +1,285 @@
+"""DSE subsystem: Pareto fronts, mapping cache, end-to-end sweeps.
+
+Pareto computation is checked on hand-built metric sets (domination edge
+cases, ties); the cache on hit/miss determinism (same inputs -> byte-equal
+MapResult, changed config -> miss); and the sweep end-to-end on a
+2-kernel x 2-size cross product under the dependency-free CDCL backend.
+"""
+import dataclasses
+import json
+import os
+
+import pytest
+
+from repro.cgra import make_grid
+from repro.core import (MapperConfig, MapResult, map_dfg, map_dfg_cached,
+                        mapping_cache_key, running_example,
+                        validate_mapping)
+from repro.core.dfg import DFG, Edge, Node
+from repro.dse import (MappingCache, SweepConfig, build_space, dominates,
+                       kernel_pareto, pareto_analysis, pareto_front,
+                       run_sweep)
+from repro.dse.cli import main as dse_main, pareto_bytes, run_smoke
+
+CDCL = MapperConfig(backend="cdcl", per_ii_timeout_s=10.0,
+                    total_timeout_s=30.0)
+
+
+# ---------------------------------------------------------------------------
+# Pareto-front computation
+# ---------------------------------------------------------------------------
+
+
+def test_dominates_strict_and_weak():
+    assert dominates((1, 1), (2, 2))
+    assert dominates((1, 2), (1, 3))      # tie in one dim, strict in other
+    assert not dominates((1, 1), (1, 1))  # identical: no strict component
+    assert not dominates((1, 3), (3, 1))  # incomparable
+    assert not dominates((2, 2), (1, 1))
+
+
+def test_dominates_dimension_mismatch():
+    with pytest.raises(ValueError):
+        dominates((1, 2), (1, 2, 3))
+
+
+def test_pareto_front_basics():
+    assert pareto_front([]) == []
+    assert pareto_front([(5, 5)]) == [0]
+    # classic staircase: all incomparable -> all on the front
+    assert pareto_front([(1, 3), (2, 2), (3, 1)]) == [0, 1, 2]
+    # (2, 2) dominated by (1, 1)
+    assert pareto_front([(1, 1), (2, 2)]) == [0]
+
+
+def test_pareto_front_ties_survive():
+    # exact duplicates never dominate each other: both stay
+    assert pareto_front([(1, 1), (1, 1), (2, 2)]) == [0, 1]
+    # equal in one coordinate, dominated in the other
+    assert pareto_front([(1, 1), (1, 2)]) == [0]
+
+
+def test_pareto_front_three_objectives():
+    pts = [(1, 9, 9), (9, 1, 9), (9, 9, 1), (9, 9, 9), (2, 9, 9)]
+    # (9,9,9) dominated by everything; (2,9,9) dominated by (1,9,9)
+    assert pareto_front(pts) == [0, 1, 2]
+
+
+def _rec(size, ii, u, cyc, nj):
+    return {"size": size, "status": "mapped", "ii": ii, "utilization": u,
+            "latency_cycles": cyc, "energy_nj": nj}
+
+
+def test_kernel_pareto_pruning_metric():
+    # 2x2 trades II/latency for the best energy, 4x4 the reverse; 6x6 is
+    # dominated in every space and should be pruned
+    pts = [_rec("2x2", 4, 0.8, 100, 1.0),
+           _rec("4x4", 2, 0.4, 60, 1.5),
+           _rec("6x6", 2, 0.2, 60, 3.0)]
+    pa = kernel_pareto(pts)
+    assert pa["runtime_front"] == ["2x2", "4x4"]
+    assert pa["compiler_front"] == ["2x2", "4x4"]
+    assert pa["retained_fraction"] == 1.0
+    assert pa["pruned_fraction"] == pytest.approx(1 / 3, abs=1e-4)
+
+
+def test_kernel_pareto_imperfect_retention():
+    # runtime front contains a point the compiler metrics prune away:
+    # b has worse (II, U) than a but strictly better runtime energy
+    pts = [_rec("a", 1, 0.9, 50, 2.0),
+           _rec("b", 2, 0.5, 80, 1.0)]
+    pa = kernel_pareto(pts)
+    assert pa["runtime_front"] == ["a", "b"]
+    assert pa["compiler_front"] == ["a"]
+    assert pa["retained_fraction"] == 0.5
+
+
+def test_pareto_analysis_skips_unmapped():
+    rows = [dict(_rec("2x2", 2, 0.5, 50, 1.0), kernel="k"),
+            {"kernel": "k", "size": "3x3", "status": "timeout"}]
+    pa = pareto_analysis(rows)
+    assert pa["per_kernel"]["k"]["points"] == 1
+    assert pa["summary"]["mapped_points"] == 1
+
+
+# ---------------------------------------------------------------------------
+# content-addressed mapping cache
+# ---------------------------------------------------------------------------
+
+
+def test_cache_key_is_content_addressed():
+    dfg = running_example()
+    grid = make_grid(2, 2)
+    k1 = mapping_cache_key(dfg, grid, CDCL)
+    # same content, different label -> same key
+    renamed = DFG(list(dfg.nodes.values()), dfg.edges, name="other")
+    assert mapping_cache_key(renamed, grid, CDCL) == k1
+    # any content change -> different key
+    assert mapping_cache_key(dfg, make_grid(3, 3), CDCL) != k1
+    bigger = dataclasses.replace(CDCL, ii_max=7)
+    assert mapping_cache_key(dfg, grid, bigger) != k1
+    assert mapping_cache_key(dfg, grid, CDCL, extra="oracle=x") != k1
+    nodes = list(dfg.nodes.values()) + [Node(99, op="SADD")]
+    edges = dfg.edges + [Edge(1, 99, 0)]
+    grown = DFG(nodes, edges, name=dfg.name)
+    assert mapping_cache_key(grown, grid, CDCL) != k1
+
+
+def test_cache_key_ignores_validate_and_resolves_backend():
+    dfg = running_example()
+    grid = make_grid(2, 2)
+    novalidate = dataclasses.replace(CDCL, validate=False)
+    assert mapping_cache_key(dfg, grid, novalidate) == \
+        mapping_cache_key(dfg, grid, CDCL)
+    auto = dataclasses.replace(CDCL, backend="auto")
+    try:
+        import z3  # noqa: F401
+        has_z3 = True
+    except ImportError:
+        has_z3 = False
+    if not has_z3:  # auto resolves to cdcl -> shared cache entries
+        assert mapping_cache_key(dfg, grid, auto) == \
+            mapping_cache_key(dfg, grid, CDCL)
+
+
+def test_map_dfg_cached_hit_is_deterministic(tmp_path):
+    dfg = running_example()
+    grid = make_grid(2, 2)
+    cache = MappingCache(str(tmp_path / "c"))
+    res1, hit1 = map_dfg_cached(dfg, grid, CDCL, cache=cache)
+    res2, hit2 = map_dfg_cached(dfg, grid, CDCL, cache=cache)
+    assert (hit1, hit2) == (False, True)
+    assert res1.status == res2.status == "mapped"
+    assert json.dumps(res1.to_dict(), sort_keys=True) == \
+        json.dumps(res2.to_dict(), sort_keys=True)
+    assert validate_mapping(res2.mapping) == []
+    # changed config -> miss
+    res3, hit3 = map_dfg_cached(dfg, grid,
+                                dataclasses.replace(CDCL, ii_max=10),
+                                cache=cache)
+    assert not hit3
+    assert cache.stats()["misses"] == 2
+
+
+def test_cache_corrupt_entry_reads_as_miss(tmp_path):
+    dfg = running_example()
+    grid = make_grid(2, 2)
+    cache = MappingCache(str(tmp_path / "c"))
+    key = mapping_cache_key(dfg, grid, CDCL)
+    map_dfg_cached(dfg, grid, CDCL, cache=cache)
+    path = cache._path(key)
+    with open(path, "w") as fh:
+        fh.write("{not json")
+    assert cache.get(key) is None
+    assert not os.path.exists(path)  # dropped
+    # and the next cached call transparently re-solves + re-stores
+    res, hit = map_dfg_cached(dfg, grid, CDCL, cache=cache)
+    assert not hit and res.status == "mapped"
+    assert cache.get(key) is not None
+
+
+def test_op_counts_feed_dynamic_energy():
+    from repro.cgra.bitstream import assemble
+    from repro.cgra.energy import (OP_ENERGY, STATIC_PJ_PER_PE_CYCLE,
+                                   metrics_for_mapping)
+    from repro.cgra.programs import BENCHMARKS
+    from repro.cgra.simulator import map_for_execution
+    prog = BENCHMARKS["bitcount"]()
+    res = map_for_execution(prog, make_grid(2, 2), CDCL)
+    asm = assemble(prog, res.mapping)
+    counts = asm.op_counts()
+    assert sum(counts.values()) == len(asm.rows) * asm.num_pes
+    m = metrics_for_mapping(prog, res.mapping)
+    expect = sum(n * OP_ENERGY.get(op, 1.0) for op, n in counts.items())
+    assert m.dynamic_nj == pytest.approx(expect / 1000.0)
+    assert m.energy_nj == pytest.approx(m.dynamic_nj + m.static_nj)
+    assert m.static_nj == pytest.approx(
+        m.cycles * asm.num_pes * STATIC_PJ_PER_PE_CYCLE / 1000.0)
+
+
+def test_map_result_round_trip():
+    dfg = running_example()
+    grid = make_grid(2, 2)
+    res = map_dfg(dfg, grid, CDCL)
+    assert res.status == "mapped"
+    back = MapResult.from_dict(dfg, grid, res.to_dict())
+    assert back.ii == res.ii
+    assert back.mii == res.mii
+    assert back.backend == res.backend
+    assert len(back.attempts) == len(res.attempts)
+    assert back.mapping.placements == res.mapping.placements
+    assert back.mapping.handoffs == res.mapping.handoffs
+    assert validate_mapping(back.mapping) == []
+
+
+# ---------------------------------------------------------------------------
+# end-to-end sweep (CDCL backend, no extras)
+# ---------------------------------------------------------------------------
+
+
+def _sweep_cfg(tmp_path, jobs=1):
+    return SweepConfig(kernels=["bitcount", "gsm"], sizes=[(2, 2), (3, 3)],
+                       backend="cdcl", per_point_timeout_s=30.0,
+                       per_ii_timeout_s=10.0, jobs=jobs,
+                       cache_dir=str(tmp_path / "cache"))
+
+
+def test_sweep_two_kernels_two_sizes(tmp_path):
+    doc = run_sweep(_sweep_cfg(tmp_path))
+    assert doc["errors"] == 0
+    assert [(r["kernel"], r["size"]) for r in doc["points"]] == \
+        [("bitcount", "2x2"), ("bitcount", "3x3"),
+         ("gsm", "2x2"), ("gsm", "3x3")]
+    assert all(r["status"] == "mapped" for r in doc["points"])
+    gsm22 = doc["points"][2]
+    assert gsm22["cegar_rounds"] >= 1  # assembler oracle fed back a clause
+    for r in doc["points"]:
+        assert r["latency_cycles"] > 0 and r["energy_nj"] > 0
+        assert r["ii"] >= r["mii"]
+    assert set(doc["pareto"]["per_kernel"]) == {"bitcount", "gsm"}
+    assert doc["cache"]["misses"] == 4 and doc["cache"]["hits"] == 0
+
+
+def test_sweep_repeat_hits_cache_and_is_byte_identical(tmp_path):
+    cfg = _sweep_cfg(tmp_path)
+    first = run_sweep(cfg)
+    second = run_sweep(cfg)
+    assert second["cache"]["hits"] == 4
+    assert second["cache"]["misses"] == 0
+    assert all(r["cache_hit"] for r in second["points"])
+    assert pareto_bytes(first) == pareto_bytes(second)
+
+
+def test_sweep_process_pool_matches_inline(tmp_path):
+    inline = run_sweep(_sweep_cfg(tmp_path / "a", jobs=1))
+    pooled = run_sweep(_sweep_cfg(tmp_path / "b", jobs=2))
+    assert pareto_bytes(inline) == pareto_bytes(pooled)
+
+
+def test_build_space_rejects_unknown_kernel():
+    with pytest.raises(ValueError, match="unknown kernels"):
+        build_space(["nope"], [(2, 2)])
+
+
+def test_cli_single_point(tmp_path, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    rc = dse_main(["--kernels", "bitcount", "--sizes", "2x2,2x3",
+                   "--backend", "cdcl", "--jobs", "1",
+                   "--out", "results/BENCH_dse.json"])
+    assert rc == 0
+    doc = json.load(open("results/BENCH_dse.json"))
+    assert doc["bench"] == "dse" and len(doc["points"]) == 2
+    assert os.path.exists("results/BENCH_dse.md")
+
+
+def test_run_smoke_contract(tmp_path, monkeypatch):
+    """The CI acceptance path: >= 3 kernels x >= 3 sizes, cache hits on
+    the repeated run, byte-identical Pareto sections."""
+    monkeypatch.chdir(tmp_path)
+    doc = run_smoke(out="results/BENCH_dse.json", jobs=2,
+                    cache_dir="results/dse_cache")
+    assert len(doc["kernels"]) >= 3 and len(doc["sizes"]) >= 3
+    rc = doc["repeat_check"]
+    assert rc["pareto_identical"] is True
+    assert rc["cache_hits_second_run"] > 0
+    assert len(doc["pareto"]["per_kernel"]) >= 3
