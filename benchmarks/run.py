@@ -6,6 +6,9 @@
   solver_opts     — beyond-paper SAT encoding/symmetry ablations
   incremental_solver — incremental vs cold-rebuild mapping engine
   dse             — design-space sweep (kernels x CGRA sizes, repro.dse)
+  frontend_cosim  — traced kernels: map + differential co-simulation
+                    (skipped without the jax extra — execution needs the
+                    PE-array kernels)
   roofline_table  — §Roofline from the multi-pod dry-run sweep
 
 Prints ``name,us_per_call,derived`` CSV per the harness convention and
@@ -102,6 +105,22 @@ def main() -> int:
                      f"{s['mean_pruned_fraction']};cache_hits="
                      f"{doc['cache']['hits']}"))
 
+    def lane_frontend():
+        import importlib.util
+        if importlib.util.find_spec("jax") is None:
+            rows.append(("frontend_cosim", 0.0, "skipped(no-jax)"))
+            return
+        from repro.frontend.verify import run_all
+        name, dt, doc = _run("frontend_cosim",
+                             lambda: run_all(seeds=16))
+        s = doc["summary"]
+        if s["failed"]:
+            bad = [k["kernel"] for k in doc["kernels"]
+                   if k["status"] not in ("ok", "mapped")]
+            raise RuntimeError(f"co-simulation failed for {bad}")
+        rows.append((name, dt, f"cosim_ok={s['ok']}/{s['total']};"
+                     f"seeds={doc['seeds']};grid={doc['grid']}"))
+
     def lane_roofline():
         from . import roofline_table
         name, dt, recs = _run("roofline_table", roofline_table.main)
@@ -113,6 +132,7 @@ def main() -> int:
     lane("solver_opts", lane_solver_opts)
     lane("incremental_solver", lane_incremental)
     lane("dse", lane_dse)
+    lane("frontend_cosim", lane_frontend)
     lane("roofline_table", lane_roofline)
 
     print("\nname,us_per_call,derived")

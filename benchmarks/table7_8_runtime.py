@@ -18,7 +18,7 @@ from repro.cgra import make_grid
 from repro.cgra.bitstream import assemble
 from repro.cgra.energy import OP_ENERGY, RuntimeMetrics, runtime_metrics
 from repro.cgra.isa import LOAD_OPS, MUL_OPS, STORE_OPS
-from repro.cgra.programs import BENCHMARKS
+from repro.cgra.registry import kernel_factories
 from repro.cgra.simulator import map_for_execution, verify
 from repro.core import MapperConfig, map_dfg
 
@@ -44,7 +44,7 @@ def cpu_metrics(prog) -> Dict[str, float]:
 
 def run(trip: int = 16, per_ii_timeout: float = 15.0) -> List[Dict]:
     rows = []
-    for name, fn in BENCHMARKS.items():
+    for name, fn in kernel_factories(origin="handwritten").items():
         prog = fn() if name not in ("bitcount", "reversebits") else fn(trip=32)
         dfg = prog.build_dfg()
         cpu = cpu_metrics(prog)

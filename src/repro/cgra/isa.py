@@ -43,6 +43,14 @@ DST_NONE = 7
 
 FXP_FRAC_BITS = 16  # FXPMUL: (a*b) >> 16
 
+IMM_MIN = -(1 << 15)
+IMM_MAX = (1 << 15) - 1
+
+
+def fits_imm(v: int) -> bool:
+    """True when ``v`` fits the 16-bit signed immediate field."""
+    return IMM_MIN <= v <= IMM_MAX
+
 LOAD_OPS = ("LWD", "LWI")
 STORE_OPS = ("SWD", "SWI")
 FLAG_SELECT_OPS = ("BSFA", "BZFA")
@@ -60,7 +68,7 @@ class Instr:
     def encode(self) -> int:
         if self.op not in OPCODE:
             raise ValueError(f"unknown op {self.op}")
-        if not (-(1 << 15) <= self.imm < (1 << 15)):
+        if not fits_imm(self.imm):
             raise ValueError(f"imm {self.imm} out of 16-bit range")
         word = (OPCODE[self.op] << 27) | (self.dst << 24) \
             | (self.src_a << 20) | (self.src_b << 16) \

@@ -1,6 +1,7 @@
 """The paper's primary contribution: SAT-based exact modulo-scheduling mapping."""
 from .dfg import DFG, Edge, Node, running_example
-from .schedule import KMS, MobilitySchedule, Slot, asap_alap, fold_kms
+from .schedule import (KMS, MobilitySchedule, Slot, asap_alap, fold_kms,
+                       kms_ii_upper_bound)
 from .mii import min_ii, rec_ii, res_ii
 from .sat_encoding import EncodingBudgetExceeded, KMSEncoding
 from .backends import (CDCLSession, SolverSession, Z3Session, make_session,
@@ -14,6 +15,7 @@ from .regalloc import allocate_registers
 __all__ = [
     "DFG", "Edge", "Node", "running_example",
     "KMS", "MobilitySchedule", "Slot", "asap_alap", "fold_kms",
+    "kms_ii_upper_bound",
     "min_ii", "rec_ii", "res_ii",
     "KMSEncoding", "EncodingBudgetExceeded",
     "SolverSession", "CDCLSession", "Z3Session", "make_session",

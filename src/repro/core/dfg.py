@@ -7,6 +7,7 @@ iteration edges have distance 0.
 """
 from __future__ import annotations
 
+from collections import Counter
 from dataclasses import dataclass, field
 from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
@@ -68,6 +69,7 @@ class DFG:
             self.succs[e.src].append(e)
             self.preds[e.dst].append(e)
         self._check_forward_acyclic()
+        self._check_flag_edges()
 
     # -- basic properties ------------------------------------------------------
 
@@ -112,6 +114,28 @@ class DFG:
 
     def _check_forward_acyclic(self) -> None:
         self.topo_order()
+
+    def _check_flag_edges(self) -> None:
+        """The PE-local flag register holds one producer's result: a BSFA/
+        BZFA consumer with two flag producers is unmappable by construction
+        — reject it here so front-ends fail at build, not at solve."""
+        for n, preds in self.preds.items():
+            flags = [e.src for e in preds if e.kind == "flag"]
+            if len(flags) > 1:
+                raise ValueError(
+                    f"node {n} has {len(flags)} flag producers {flags}; "
+                    "the PE flag register admits exactly one")
+
+    def flag_producer(self, n: int) -> Optional[int]:
+        """The single flag producer feeding ``n``, or None."""
+        for e in self.preds[n]:
+            if e.kind == "flag":
+                return e.src
+        return None
+
+    def op_histogram(self) -> Dict[str, int]:
+        """Opcode -> node count (front-end reporting / diagnostics)."""
+        return dict(Counter(node.op for node in self.nodes.values()))
 
     # -- convenience constructors ------------------------------------------------
 

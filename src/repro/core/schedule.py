@@ -15,7 +15,7 @@ the shallowest rows carry label ``K-1`` (the newest), exactly as in Table 2.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List, Set, Tuple
+from typing import Dict, List, Optional, Set, Tuple
 
 from .dfg import DFG
 
@@ -68,6 +68,25 @@ def asap_alap(dfg: DFG, latency: int = 1) -> MobilitySchedule:
                 continue
             alap[n] = min(alap[n], alap[e.dst] - latency)
     return MobilitySchedule(asap=asap, alap=alap, length=length)
+
+
+def kms_ii_upper_bound(dfg: DFG, num_pes: Optional[int] = None) -> int:
+    """Largest II at which modulo scheduling is still meaningful.
+
+    At ``II = L`` (the mobility-schedule length) the KMS degenerates to a
+    single un-folded copy of the MS — successive iterations no longer
+    overlap, so any II beyond it buys nothing.  Traced kernels assert they
+    map at some ``II <= kms_ii_upper_bound`` (repro.frontend.verify); a
+    failure means the front-end emitted a DFG the mapper cannot even
+    serialize.  ``num_pes`` folds in the resource/recurrence lower bound so
+    the result is always a valid search ceiling (``>= mII``).
+    """
+    ub = max(1, asap_alap(dfg).length)
+    if num_pes is not None:
+        from .mii import min_ii  # deferred: mii has no schedule dependency
+
+        ub = max(ub, min_ii(dfg, num_pes))
+    return ub
 
 
 @dataclass(frozen=True)

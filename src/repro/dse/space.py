@@ -1,23 +1,25 @@
 """Design space for the paper's §6-7 exploration: kernels × CGRA sizes.
 
 A *design point* is one (CIL kernel, grid geometry) cell of the sweep.
-Kernels come from the Table-6 benchmark registry
-(``repro.cgra.programs.BENCHMARKS``); geometries default to the paper's
-2x2 → 6x6 ladder.  The smoke subsets are chosen so CI maps every point in
-seconds on the pure-Python CDCL backend with no z3/jax extras.
+Kernels come from the shared registry (``repro.cgra.registry``), which
+covers both the hand-written Table-6 benchmarks and the traced front-end
+kernels (``repro.frontend.kernels``) — anything registered sweeps without
+edits here.  Geometries default to the paper's 2x2 → 6x6 ladder.  The
+smoke subsets are chosen so CI maps every point in seconds on the
+pure-Python CDCL backend with no z3/jax extras.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 from typing import Iterable, List, Sequence, Tuple
 
-from ..cgra.programs import BENCHMARKS
+from ..cgra.registry import kernel_names, kernel_program as _kernel_program
 
 # full ladder (paper §7 sweeps square arrays; the rectangles probe the
 # per-column memory-port arbitration between them)
 DEFAULT_SIZES: Tuple[Tuple[int, int], ...] = (
     (2, 2), (2, 3), (3, 3), (3, 4), (4, 4), (5, 5), (6, 6))
-DEFAULT_KERNELS: Tuple[str, ...] = tuple(BENCHMARKS)
+DEFAULT_KERNELS: Tuple[str, ...] = tuple(kernel_names())
 
 # CI smoke: 4 kernels × 3 sizes, each point sub-second under CDCL with no
 # extras; gsm@2x2 keeps a CEGAR-active point and sqrt@2x2 an UNSAT one in
@@ -56,14 +58,15 @@ def parse_sizes(spec: str) -> List[Tuple[int, int]]:
 def build_space(kernels: Sequence[str],
                 sizes: Iterable[Tuple[int, int]]) -> List[DesignPoint]:
     """Cross product in deterministic (kernel-major) order."""
-    unknown = [k for k in kernels if k not in BENCHMARKS]
+    registered = kernel_names()
+    unknown = [k for k in kernels if k not in registered]
     if unknown:
         raise ValueError(
-            f"unknown kernels {unknown}; registered: {sorted(BENCHMARKS)}")
+            f"unknown kernels {unknown}; registered: {sorted(registered)}")
     return [DesignPoint(kernel=k, rows=r, cols=c)
             for k in kernels for (r, c) in sizes]
 
 
 def kernel_program(name: str):
     """Instantiate the registered LoopBuilder for ``name``."""
-    return BENCHMARKS[name]()
+    return _kernel_program(name)

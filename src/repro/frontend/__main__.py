@@ -1,0 +1,7 @@
+"""``python -m repro.frontend`` — co-simulate every traced kernel."""
+
+import sys
+
+from .verify import main
+
+sys.exit(main())

@@ -1,3 +1,22 @@
-# OPTIONAL layer. Add <name>.py (or .cu) + ops.py + ref.py ONLY
-# for compute hot-spots the paper itself optimizes with a custom
-# kernel. Leave this package empty if the paper has none.
+# JAX PE-array execution kernels (optional extra: pip install .[jax]).
+#
+#   ops       — jit'd instruction-grid runner (decode_fields / init_state /
+#               run_program), the entry point simulate() uses
+#   ref       — pure-jnp cycle step: the reference PE-array semantics
+#   pe_array  — Pallas cycle-step kernel (interpret=True off-TPU)
+#
+# Everything importing this package defers the jax import to first use so
+# mapping-only flows (SAT mapper, DSE sweep, traced-kernel legalization and
+# the map-only co-sim lane) run with zero optional extras.  Not to be
+# confused with the *CIL kernel registry* (repro.cgra.registry), which
+# names the loop workloads those flows operate on.
+
+_SUBMODULES = ("ops", "pe_array", "ref")
+
+
+def __getattr__(name):
+    if name in _SUBMODULES:
+        import importlib
+
+        return importlib.import_module(f".{name}", __name__)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -11,6 +11,7 @@ pytest.importorskip("jax", reason="optional extra: pip install .[jax] "
                     "(execution end-to-end needs the PE-array kernels)")
 from repro.cgra import make_grid
 from repro.cgra.programs import BENCHMARKS, synthetic_dfg, TABLE3
+from repro.cgra.registry import make_mem as registry_mem
 from repro.cgra.simulator import map_for_execution, simulate, verify
 from repro.core import MapperConfig, map_dfg, min_ii, validate_mapping
 
@@ -21,18 +22,8 @@ CFG = MapperConfig(per_ii_timeout_s=90, total_timeout_s=120, ii_max=30)
 
 
 def make_mem(name: str, seed: int = 0) -> np.ndarray:
-    rng = np.random.RandomState(seed)
-    mem = np.zeros(128, np.int32)
-    if name == "stringsearch":
-        mem[0:16] = rng.randint(0, 8, 16)     # small alphabet -> real matches
-        mem[32:48] = rng.randint(0, 8, 16)
-        mem[48:64] = rng.randint(0, 8, 16)
-    elif name == "gsm":
-        mem[0:16] = rng.randint(-2**14, 2**14, 16)
-        mem[32:48] = rng.randint(-2**14, 2**14, 16)
-    else:
-        mem[0:32] = rng.randint(0, 2**30, 32)
-    return mem
+    """Input images now live with the kernels in the shared registry."""
+    return registry_mem(name, seed)
 
 
 @pytest.mark.parametrize("name", sorted(BENCHMARKS))
