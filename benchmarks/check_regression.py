@@ -2,12 +2,20 @@
 
   python benchmarks/check_regression.py CURRENT BASELINE [--time-tol 0.25]
 
-Two artifact shapes are understood:
+Three artifact shapes are understood:
 
 * ``benchmarks/incremental_solver.py`` row lists — rows are joined on
   (cil, size, backend);
 * ``repro.dse`` sweep documents — points are joined on (kernel, size)
-  and the whole Pareto section must match exactly.
+  and the whole Pareto section must match exactly;
+* ``python -m repro map --json`` digests (``bench: "toolchain_map"``) —
+  the single-kernel toolchain smoke.
+
+``--assert-identical`` additionally serializes the *correctness
+projection* of both sides (every machine-independent field, canonical
+key order) and requires the bytes to be equal — the strongest form of
+the smoke-baseline contract: not just joined fields but the full row
+sets must survive a refactor byte-for-byte.
 
 Correctness fields (status, II, Pareto fronts, cross-check flags) must be
 identical — any drift hard-fails.  Wall-time fields are compared with a
@@ -33,6 +41,10 @@ INC_TIME = ("cold_s", "incremental_s")
 DSE_HARD = ("status", "ii", "utilization", "latency_cycles", "energy_nj",
             "cegar_rounds")
 DSE_TIME = ("map_time_s",)
+TOOLMAP_HARD = ("bench", "kernel", "grid", "status", "stage", "ii", "mii",
+                "backend", "map_status", "cegar_rounds", "oracle",
+                "utilization", "metrics", "error")
+TOOLMAP_TIME = ("wall_time_s",)
 
 
 class Gate:
@@ -111,6 +123,46 @@ def check_dse(cur: Dict, base: Dict, gate: Gate) -> None:
                base.get("wall_time_s"))
 
 
+def check_toolchain_map(cur: Dict, base: Dict, gate: Gate) -> None:
+    where = f"toolchain_map({base.get('kernel')}@{base.get('grid')})"
+    for f in TOOLMAP_HARD:
+        if f in base:
+            gate.hard(where, f, cur.get(f), base.get(f))
+    for f in TOOLMAP_TIME:
+        gate.timed(where, f, cur.get(f), base.get(f))
+
+
+def correctness_projection(doc) -> bytes:
+    """Canonical bytes of every machine-independent field of ``doc``.
+
+    Wall times, cache counters and per-stage timings are excluded; row
+    sets are key-sorted so the projection is order-insensitive.  Two
+    artifacts with equal projections are interchangeable as far as the
+    CI contract is concerned.
+    """
+    if isinstance(doc, dict) and doc.get("bench") == "dse":
+        stable = {
+            "points": sorted(
+                ({k: p.get(k) for k in ("kernel", "size") + DSE_HARD}
+                 for p in doc.get("points", [])),
+                key=lambda p: (str(p["kernel"]), str(p["size"]))),
+            "pareto": doc.get("pareto"),
+        }
+    elif isinstance(doc, dict) and doc.get("bench") == "toolchain_map":
+        stable = {k: doc.get(k) for k in TOOLMAP_HARD}
+    elif isinstance(doc, list):
+        stable = sorted(
+            ({k: r.get(k)
+              for k in ("cil", "size", "backend") + INC_HARD if k in r}
+             for r in doc),
+            key=lambda r: (str(r.get("cil")), str(r.get("size")),
+                           str(r.get("backend"))))
+    else:
+        raise ValueError("unrecognized artifact shape")
+    return json.dumps(stable, sort_keys=True,
+                      separators=(",", ":")).encode("utf-8")
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current")
@@ -123,6 +175,9 @@ def main(argv=None) -> int:
     ap.add_argument("--correctness-only", action="store_true",
                     help="gate only machine-independent fields (the PR CI "
                          "lane); wall-time gating is nightly-only")
+    ap.add_argument("--assert-identical", action="store_true",
+                    help="additionally require byte-identical correctness "
+                         "projections (smoke-baseline contract)")
     args = ap.parse_args(argv)
     with open(args.current) as fh:
         cur = json.load(fh)
@@ -132,12 +187,22 @@ def main(argv=None) -> int:
                 check_times=not args.correctness_only)
     if isinstance(base, dict) and base.get("bench") == "dse":
         check_dse(cur, base, gate)
+    elif isinstance(base, dict) and base.get("bench") == "toolchain_map":
+        check_toolchain_map(cur, base, gate)
     elif isinstance(base, list):
         check_incremental(cur, base, gate)
     else:
         print(f"unrecognized baseline shape in {args.baseline}",
               file=sys.stderr)
         return 2
+    if args.assert_identical:
+        gate.checked += 1
+        try:
+            if correctness_projection(cur) != correctness_projection(base):
+                gate.errors.append(
+                    "correctness projections are not byte-identical")
+        except ValueError as e:
+            gate.errors.append(f"assert-identical: {e}")
     print(f"checked {gate.checked} fields against {args.baseline}")
     if gate.errors:
         print("REGRESSIONS:", file=sys.stderr)

@@ -17,8 +17,9 @@ from typing import Dict, List
 from repro.cgra import make_grid
 from repro.cgra.programs import TABLE3, synthetic_dfg
 from repro.cgra.registry import kernel_factories
-from repro.core import (HeuristicConfig, MapperConfig, map_dfg,
-                        map_dfg_heuristic, min_ii)
+from repro.core import (HeuristicConfig, MapperConfig, map_dfg_heuristic,
+                        min_ii)
+from repro.toolchain import Toolchain
 
 SIZES = [(2, 2), (3, 3), (4, 4), (5, 5)]
 
@@ -37,15 +38,19 @@ def collect_cils(full: bool = False):
 
 def run(full: bool = False, per_ii_timeout: float = 15.0,
         ii_max: int = 40) -> List[Dict]:
+    # this lane compares raw SAT mapping quality against the heuristic, so
+    # the session maps bare DFGs with no CEGAR oracle wired in
+    cfg = MapperConfig.for_bench(per_ii_timeout_s=per_ii_timeout,
+                                 ii_max=ii_max,
+                                 total_timeout_s=3 * per_ii_timeout)
     rows = []
     for name, dfg in collect_cils(full).items():
         for (r, c) in SIZES:
             grid = make_grid(r, c)
+            tc = Toolchain(grid, cfg, oracle=None)
             mii = min_ii(dfg, grid.num_pes)
             t0 = time.monotonic()
-            sat = map_dfg(dfg, grid, MapperConfig(
-                per_ii_timeout_s=per_ii_timeout, ii_max=ii_max,
-                total_timeout_s=3 * per_ii_timeout))
+            sat = tc.map(dfg)
             sat_t = time.monotonic() - t0
             t0 = time.monotonic()
             heur = map_dfg_heuristic(dfg, grid, HeuristicConfig(

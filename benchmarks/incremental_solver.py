@@ -1,8 +1,9 @@
 """Incremental vs cold-rebuild mapping: the tentpole perf benchmark.
 
-For each benchmark CIL the mapper runs twice through
-``map_for_execution`` (SAT mapping with the bitstream assembler as CEGAR
-oracle — prologue-clobber counterexamples feed back as blocking clauses):
+For each benchmark CIL the mapper runs twice through a
+``repro.toolchain`` session (SAT mapping with the bitstream assembler as
+CEGAR oracle — prologue-clobber counterexamples feed back as blocking
+clauses):
 
 * **cold**  — ``MapperConfig(incremental=False)``: every CEGAR round
   rebuilds the KMS encoding, re-Tseitins the CNF and cold-starts the
@@ -26,10 +27,8 @@ import math
 import time
 from typing import Dict, List, Optional
 
-from repro.cgra import make_grid
-from repro.cgra.programs import BENCHMARKS
-from repro.cgra.simulator import map_for_execution
 from repro.core import MapperConfig
+from repro.toolchain import Toolchain
 
 # (cil, grid) pairs chosen so the sweep covers both regimes: gsm@2x2 is
 # CEGAR-active (the assembler rejects its first mapping with a prologue
@@ -48,10 +47,10 @@ SMALLEST = [("bitcount", (2, 2))]  # CI smoke subset
 
 
 def _run_once(name: str, size, cfg: MapperConfig) -> Dict:
-    prog = BENCHMARKS[name]()
-    grid = make_grid(*size)
+    tc = Toolchain(tuple(size), cfg)
+    prog = tc.program(name)
     t0 = time.monotonic()
-    res = map_for_execution(prog, grid, cfg)
+    res = tc.map(prog)
     dt = time.monotonic() - t0
     return {
         "status": res.status, "ii": res.ii, "time_s": dt,
@@ -75,9 +74,9 @@ def run(backends=("cdcl",), per_ii_timeout: float = 20.0,
     rows: List[Dict] = []
     for name, size in (cases or CASES):
         for backend in backends:
-            base = MapperConfig(backend=backend,
-                                per_ii_timeout_s=per_ii_timeout,
-                                total_timeout_s=total_timeout)
+            base = MapperConfig.for_bench(backend=backend,
+                                          per_ii_timeout_s=per_ii_timeout,
+                                          total_timeout_s=total_timeout)
             best: Dict[str, Dict] = {}
             for mode, inc in (("cold", False), ("incremental", True)):
                 cfg = dataclasses.replace(base, incremental=inc)

@@ -13,15 +13,14 @@ instead of stalling for minutes.
 """
 from __future__ import annotations
 
-import dataclasses
 import importlib.util
 import json
 import time
 from typing import Dict, List
 
-from repro.cgra import make_grid
 from repro.cgra.programs import BENCHMARKS, synthetic_dfg
-from repro.core import MapperConfig, map_dfg
+from repro.core import MapperConfig
+from repro.toolchain import Toolchain
 
 HAS_Z3 = importlib.util.find_spec("z3") is not None
 
@@ -34,15 +33,17 @@ CASES = [
     ("hotspot", lambda: synthetic_dfg("hotspot"), (4, 4)),
 ]
 
+# encoding/backend knobs per variant; budgets come uniformly from
+# MapperConfig.for_bench so this lane can never drift from the others
 VARIANTS = {
-    "paper_pairwise_z3": MapperConfig(backend="z3", amo="pairwise"),
-    "builtin_amo_z3": MapperConfig(backend="z3", amo="builtin"),
-    "symbreak_z3": MapperConfig(backend="z3", amo="pairwise",
-                                symmetry_break=True),
-    "symbreak_builtin_z3": MapperConfig(backend="z3", amo="builtin",
-                                        symmetry_break=True),
-    "cdcl_pairwise": MapperConfig(backend="cdcl", amo="pairwise"),
-    "cdcl_sequential": MapperConfig(backend="cdcl", amo="sequential"),
+    "paper_pairwise_z3": {"backend": "z3", "amo": "pairwise"},
+    "builtin_amo_z3": {"backend": "z3", "amo": "builtin"},
+    "symbreak_z3": {"backend": "z3", "amo": "pairwise",
+                    "symmetry_break": True},
+    "symbreak_builtin_z3": {"backend": "z3", "amo": "builtin",
+                            "symmetry_break": True},
+    "cdcl_pairwise": {"backend": "cdcl", "amo": "pairwise"},
+    "cdcl_sequential": {"backend": "cdcl", "amo": "sequential"},
 }
 
 
@@ -50,16 +51,15 @@ def run(per_ii_timeout: float = 20.0) -> List[Dict]:
     rows: List[Dict] = []
     for name, make_dfg, size in CASES:
         dfg = make_dfg()
-        grid = make_grid(*size)
         case_rows: List[Dict] = []
-        for vname, cfg in VARIANTS.items():
+        for vname, knobs in VARIANTS.items():
             if vname.endswith("_z3") and not HAS_Z3:
                 continue
-            cfg = dataclasses.replace(cfg, per_ii_timeout_s=per_ii_timeout,
-                                      ii_max=30,
-                                      total_timeout_s=2 * per_ii_timeout)
+            cfg = MapperConfig.for_bench(per_ii_timeout_s=per_ii_timeout,
+                                         **knobs)
+            tc = Toolchain(size, cfg, oracle=None)
             t0 = time.monotonic()
-            res = map_dfg(dfg, grid, cfg)
+            res = tc.map(dfg)
             dt = time.monotonic() - t0
             vars_ = res.attempts[-1].num_vars if res.attempts else 0
             clauses = res.attempts[-1].num_clauses if res.attempts else 0

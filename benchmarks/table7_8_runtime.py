@@ -9,18 +9,15 @@ model (repro.cgra.energy).
 from __future__ import annotations
 
 import json
-import time
-from typing import Dict, List, Optional
+from typing import Dict, List
 
 import numpy as np
 
-from repro.cgra import make_grid
-from repro.cgra.bitstream import assemble
-from repro.cgra.energy import OP_ENERGY, RuntimeMetrics, runtime_metrics
 from repro.cgra.isa import LOAD_OPS, MUL_OPS, STORE_OPS
 from repro.cgra.registry import kernel_factories
-from repro.cgra.simulator import map_for_execution, verify
-from repro.core import MapperConfig, map_dfg
+from repro.cgra.simulator import verify
+from repro.core import MapperConfig
+from repro.toolchain import Toolchain
 
 SIZES = {"D2": (2, 2), "D3": (3, 3), "D4": (4, 4)}
 
@@ -43,34 +40,32 @@ def cpu_metrics(prog) -> Dict[str, float]:
 
 
 def run(trip: int = 16, per_ii_timeout: float = 15.0) -> List[Dict]:
+    cfg = MapperConfig.for_bench(per_ii_timeout_s=per_ii_timeout)
     rows = []
     for name, fn in kernel_factories(origin="handwritten").items():
         prog = fn() if name not in ("bitcount", "reversebits") else fn(trip=32)
-        dfg = prog.build_dfg()
         cpu = cpu_metrics(prog)
         for label, (r, c) in SIZES.items():
-            grid = make_grid(r, c)
-            res = map_for_execution(prog, grid, MapperConfig(
-                per_ii_timeout_s=per_ii_timeout, ii_max=30))
-            if res.mapping is None:
-                rows.append({"cil": name, "size": label, "status": res.status})
+            # one compile() per cell: map (assembler oracle) + asm + metrics
+            cr = Toolchain((r, c), cfg).compile(prog)
+            if not cr.ok:  # unmapped, timed out, or a post-map stage error
+                rows.append({"cil": name, "size": label, "status": cr.status})
                 continue
             mem = np.zeros(128, np.int32)
             rng = np.random.RandomState(7)
             mem[0:64] = rng.randint(0, 2**12, 64)
-            errs = verify(prog, res.mapping, mem)
-            asm = assemble(prog, res.mapping)
-            m = runtime_metrics(asm, num_cols=c, utilization=res.mapping.utilization)
+            errs = verify(prog, cr.mapping, mem)
+            m = cr.metrics
             rows.append({
                 "cil": name, "size": label, "status": "ok",
-                "ii": res.mapping.ii, "u": round(res.mapping.utilization, 3),
+                "ii": cr.mapping.ii, "u": round(cr.mapping.utilization, 3),
                 "cycles": m.cycles, "energy_nj": round(m.energy_nj, 2),
                 "verified": not errs,
                 "speedup_vs_cpu": round(cpu["cycles"] / m.cycles, 2),
                 "energy_gain_vs_cpu": round(cpu["energy_nj"] / m.energy_nj, 2),
             })
-            print(f"  t7 {name:14s} {label}: II={res.mapping.ii} "
-                  f"U={res.mapping.utilization:.2f} cyc={m.cycles} "
+            print(f"  t7 {name:14s} {label}: II={cr.mapping.ii} "
+                  f"U={cr.mapping.utilization:.2f} cyc={m.cycles} "
                   f"E={m.energy_nj:.1f}nJ spdup={rows[-1]['speedup_vs_cpu']}x"
                   f" verified={not errs}", flush=True)
     return rows

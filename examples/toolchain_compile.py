@@ -1,0 +1,47 @@
+"""Compile kernels through the staged toolchain session (repro.toolchain).
+
+Shows the three ways to consume the API: one end-to-end ``compile()``,
+stage-by-stage artifacts, and a cached ``compile_many`` fan-out.
+
+Run:  PYTHONPATH=src python examples/toolchain_compile.py
+"""
+
+from repro.core import MapperConfig
+from repro.toolchain import Toolchain
+
+
+def main() -> None:
+    cfg = MapperConfig(backend="cdcl", per_ii_timeout_s=15.0, total_timeout_s=45.0)
+
+    # 1. one call, kernel name -> metrics (stage attribution on failure)
+    tc = Toolchain("4x4", cfg)
+    cr = tc.compile("dotprod")
+    print(
+        f"dotprod@4x4: status={cr.status} II={cr.ii} (mII={cr.mii}) "
+        f"cycles={cr.metrics.cycles} energy={cr.metrics.energy_nj:.2f}nJ"
+    )
+
+    # 2. the same pipeline, stage by stage
+    prog = tc.program("bitcount")
+    print(f"program: {prog}")
+    res = tc.map(prog)
+    asm = tc.assemble(prog, res.mapping)
+    m = tc.metrics(prog, res.mapping, asm)
+    print(f"bitcount@4x4: II={res.ii} rows={len(asm.rows)} cycles={m.cycles}")
+
+    # 3. a failing kernel reports the stage it died in instead of raising
+    bad = Toolchain("2x2", cfg).compile("sqrt")  # UNSAT on a 2x2 torus
+    print(f"sqrt@2x2: status={bad.status} failed_stage={bad.stage}")
+
+    # 4. fan out kernels x grids through the pool + mapping cache
+    kernels = ["dotprod", "fir4", "relu_clamp"]
+    many = tc.compile_many(kernels, grids=["3x3", "4x4"], jobs=2)
+    for r in many:
+        print(
+            f"  {r.kernel}@{r.size}: status={r.status} II={r.ii} "
+            f"cache_hit={r.cache_hit}"
+        )
+
+
+if __name__ == "__main__":
+    main()

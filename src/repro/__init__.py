@@ -1,4 +1,16 @@
 """repro: SAT-MapIt (SAT-based exact modulo scheduling for CGRAs) as a
 production JAX framework — solver core, CGRA runtime, LM substrate,
-multi-pod launch."""
+multi-pod launch.
+
+The compilation-session API lives in :mod:`repro.toolchain`
+(``from repro.toolchain import Toolchain``); ``repro.Toolchain`` is a
+lazy alias so the top-level package stays import-light."""
 __version__ = "0.1.0"
+
+
+def __getattr__(name):
+    if name == "Toolchain":
+        from .toolchain import Toolchain
+
+        return Toolchain
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

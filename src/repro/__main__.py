@@ -1,0 +1,7 @@
+"""``python -m repro`` — the top-level toolchain CLI (map/cosim/sweep)."""
+
+import sys
+
+from .toolchain.cli import main
+
+sys.exit(main())

@@ -22,20 +22,17 @@ from .programs import LoopBuilder
 def map_for_execution(program: LoopBuilder, grid: PEGrid, config=None):
     """SAT-map with the bitstream assembler as a CEGAR oracle: prologue
     clobbers (codegen-level counterexamples the paper's encoding does not
-    model) are fed back as blocking clauses."""
+    model) are fed back as blocking clauses.
+
+    Compatibility shim — new code should use the session API instead::
+
+        Toolchain(grid, config).map(program)   # repro.toolchain
+    """
     from ..core.mapper import map_dfg
-    from .bitstream import PrologueClobber
+    from ..toolchain.oracles import assembler_oracle
 
-    dfg = program.build_dfg()
-
-    def check(mapping):
-        try:
-            assemble(program, mapping)
-        except PrologueClobber as e:
-            return e.triples
-        return None
-
-    return map_dfg(dfg, grid, config, assemble_check=check)
+    return map_dfg(program.build_dfg(), grid, config,
+                   assemble_check=assembler_oracle(program))
 
 
 def neighbor_table(grid: PEGrid) -> Tuple[Tuple[int, int, int, int], ...]:

@@ -50,6 +50,23 @@ class MapperConfig:
     max_cegar_rounds: int = 25     # blocking-clause refinements per II
     incremental: bool = True       # False: cold-rebuild per CEGAR round
 
+    @classmethod
+    def for_bench(cls, backend: str = "auto",
+                  per_ii_timeout_s: float = 20.0, ii_max: int = 30,
+                  total_timeout_s: Optional[float] = None,
+                  **overrides) -> "MapperConfig":
+        """The one benchmark-lane preset.  Every ``benchmarks/*.py`` script
+        used to hand-roll its own ``ii_max``/timeout fields with slightly
+        different defaults; this constructor is the single source of that
+        budget policy (total budget defaults to 2x the per-II budget, and
+        it also covers encoding construction — see the module docstring).
+        Extra keyword overrides pass straight through to the dataclass."""
+        if total_timeout_s is None:
+            total_timeout_s = 2.0 * per_ii_timeout_s
+        return cls(backend=backend, per_ii_timeout_s=per_ii_timeout_s,
+                   total_timeout_s=total_timeout_s, ii_max=ii_max,
+                   **overrides)
+
 
 @dataclass
 class IIAttempt:
@@ -237,7 +254,8 @@ def map_dfg(dfg: DFG, grid: PEGrid,
 
 def mapping_cache_key(dfg: DFG, grid: PEGrid,
                       config: Optional[MapperConfig] = None,
-                      extra: str = "") -> str:
+                      extra: str = "",
+                      ii_start: Optional[int] = None) -> str:
     """Content hash of everything that determines ``map_dfg``'s output.
 
     Covers the DFG (node ids + ops, edges with distance/kind), the
@@ -245,8 +263,11 @@ def mapping_cache_key(dfg: DFG, grid: PEGrid,
     :class:`MapperConfig` field (``backend`` is resolved first so
     ``"auto"`` and the backend it picks share cache entries).  ``extra``
     tags out-of-band inputs the signature cannot see — e.g. which CEGAR
-    oracle (``assemble_check``) the caller wires in.  DFG/arch *names* are
-    deliberately excluded: the key addresses content, not labels.
+    oracle (``assemble_check``) the caller wires in.  A non-default
+    ``ii_start`` changes the search (and so the key); the unset case is
+    omitted from the payload so pre-existing cache entries stay valid.
+    DFG/arch *names* are deliberately excluded: the key addresses
+    content, not labels.
     """
     cfg = config or MapperConfig()
     cfg_key = {
@@ -272,6 +293,8 @@ def mapping_cache_key(dfg: DFG, grid: PEGrid,
         "config": cfg_key,
         "extra": extra,
     }
+    if ii_start:
+        payload["ii_start"] = ii_start
     blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
     return hashlib.sha256(blob.encode("utf-8")).hexdigest()
 
@@ -279,7 +302,8 @@ def mapping_cache_key(dfg: DFG, grid: PEGrid,
 def map_dfg_cached(dfg: DFG, grid: PEGrid,
                    config: Optional[MapperConfig] = None,
                    cache=None, assemble_check=None,
-                   cache_extra: str = ""):
+                   cache_extra: str = "",
+                   ii_start: Optional[int] = None):
     """Cache-aware ``map_dfg``: returns ``(MapResult, cache_hit)``.
 
     ``cache`` is any object with ``get(key) -> Optional[dict]`` /
@@ -289,11 +313,13 @@ def map_dfg_cached(dfg: DFG, grid: PEGrid,
     """
     key = None
     if cache is not None:
-        key = mapping_cache_key(dfg, grid, config, extra=cache_extra)
+        key = mapping_cache_key(dfg, grid, config, extra=cache_extra,
+                                ii_start=ii_start)
         stored = cache.get(key)
         if stored is not None:
             return MapResult.from_dict(dfg, grid, stored), True
-    res = map_dfg(dfg, grid, config, assemble_check=assemble_check)
+    res = map_dfg(dfg, grid, config, ii_start=ii_start,
+                  assemble_check=assemble_check)
     if cache is not None and res.status != "timeout":
         cache.put(key, res.to_dict())
     return res, False

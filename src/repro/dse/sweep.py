@@ -1,40 +1,36 @@
 """Parallel design-space sweep: map every kernel across every grid size.
 
 One sweep = a cross product of registered CIL kernels and CGRA
-geometries.  Cache hits (``MappingCache``) are resolved in the parent
-and skip solving entirely; misses fan out to a ``ProcessPoolExecutor``
-(``os.cpu_count()``-bounded, one mapper session per worker process) where
-each point runs the full incremental SAT mapping with the bitstream
-assembler as CEGAR oracle under a per-point ``total_timeout_s`` budget.
-Run-time metrics (latency cycles, energy) come from the calibrated model
-over the assembled instruction grid — no JAX required — so the whole
-sweep works with zero optional extras.
+geometries, compiled through one :class:`repro.toolchain.Toolchain`
+session: ``compile_many`` resolves cache hits (``MappingCache``) in the
+parent, fans misses out to a ``ProcessPoolExecutor``
+(``os.cpu_count()``-bounded, per-point ``total_timeout_s`` budgets,
+``--jobs 1`` inline mode) where each point runs the full incremental SAT
+mapping with the bitstream assembler as CEGAR oracle, and runs the
+assemble/metrics stages in the parent.  Run-time metrics (latency
+cycles, energy) come from the calibrated model over the assembled
+instruction grid — no JAX required — so the whole sweep works with zero
+optional extras.
 
-Rows are emitted in deterministic kernel-major order and all floats are
-rounded on the way out, so identical inputs produce byte-identical
-Pareto sections (the property the CI regression gate checks).
+This module keeps only what is sweep-specific: the row/document format
+and the Pareto analysis.  Rows are emitted in deterministic kernel-major
+order and all floats are rounded on the way out, so identical inputs
+produce byte-identical Pareto sections (the property the CI regression
+gate checks).
 """
 from __future__ import annotations
 
-import dataclasses
-import os
 import time
-from concurrent.futures import ProcessPoolExecutor
 from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from ..cgra.arch import make_grid
-from ..cgra.energy import metrics_for_mapping
-from ..core.mapper import (MapperConfig, MapResult, map_dfg,
-                           mapping_cache_key, resolve_backend)
+from ..core.mapper import MapperConfig, resolve_backend
+from ..toolchain.artifacts import CompileResult
+from ..toolchain.oracles import ORACLE_TAG  # noqa: F401 (compat re-export)
+from ..toolchain.session import Toolchain
 from .cache import MappingCache
 from .pareto import pareto_analysis
-from .space import (DEFAULT_KERNELS, DEFAULT_SIZES, DesignPoint,
-                    build_space, kernel_program)
-
-# tags the CEGAR oracle wired into every sweep solve — part of the cache
-# key so plain `map_dfg` results can never alias oracle-checked ones
-ORACLE_TAG = "oracle=bitstream-prologue"
+from .space import DEFAULT_KERNELS, DEFAULT_SIZES, DesignPoint, build_space
 
 
 @dataclass
@@ -55,57 +51,32 @@ class SweepConfig:
                             ii_max=self.ii_max)
 
 
-def _solve_point(task: Tuple[str, int, int, Dict]) -> Dict:
-    """Worker: one (kernel, grid) SAT mapping with the assembler oracle.
-
-    Module-level (picklable) and self-contained: rebuilds the program,
-    grid and MapperConfig from plain values, returns plain dicts.
-    """
-    kernel, rows, cols, cfg_dict = task
-    from ..cgra.bitstream import PrologueClobber, assemble
-
-    program = kernel_program(kernel)
-    dfg = program.build_dfg()
-    grid = make_grid(rows, cols)
-    cfg = MapperConfig(**cfg_dict)
-
-    def check(mapping):
-        try:
-            assemble(program, mapping)
-        except PrologueClobber as e:
-            return e.triples
-        return None
-
-    t0 = time.monotonic()
-    try:
-        res = map_dfg(dfg, grid, cfg, assemble_check=check)
-    except Exception as e:  # surfaced as a per-point "error" row
-        return {"kernel": kernel, "rows": rows, "cols": cols,
-                "error": f"{type(e).__name__}: {e}",
-                "map_time_s": time.monotonic() - t0}
-    return {"kernel": kernel, "rows": rows, "cols": cols,
-            "result": res.to_dict(),
-            "map_time_s": time.monotonic() - t0}
-
-
-def _record(point: DesignPoint, res: MapResult, map_time_s: float,
-            cache_hit: bool, program) -> Dict:
+def _record(point: DesignPoint, cr: CompileResult) -> Dict:
+    """One sweep row from one compile result (deterministic fields)."""
+    if cr.status == "error":
+        return {"kernel": point.kernel, "size": point.size,
+                "rows": point.rows, "cols": point.cols,
+                "num_pes": point.num_pes, "status": "error",
+                "ii": None, "error": cr.error,
+                "map_time_s": round(cr.map_time_s, 4),
+                "cache_hit": cr.cache_hit}
+    res = cr.map_result
     row = {
         "kernel": point.kernel, "size": point.size,
         "rows": point.rows, "cols": point.cols,
         "num_pes": point.num_pes,
         "status": res.status, "mii": res.mii,
         "backend": res.backend,
-        "map_time_s": round(map_time_s, 4),
-        "cache_hit": cache_hit,
+        "map_time_s": round(cr.map_time_s, 4),
+        "cache_hit": cr.cache_hit,
         "cegar_rounds": res.cegar_rounds,
         "attempts": len(res.attempts),
     }
-    if res.mapping is not None:
-        m = metrics_for_mapping(program, res.mapping)
+    if cr.mapping is not None:
+        m = cr.metrics
         row.update({
-            "ii": res.mapping.ii,
-            "utilization": round(res.mapping.utilization, 4),
+            "ii": cr.mapping.ii,
+            "utilization": round(cr.mapping.utilization, 4),
             "latency_cycles": m.cycles,
             "energy_nj": round(m.energy_nj, 4),
             "dynamic_nj": round(m.dynamic_nj, 4),
@@ -121,62 +92,15 @@ def run_sweep(cfg: Optional[SweepConfig] = None) -> Dict:
     cfg = cfg or SweepConfig()
     t0 = time.monotonic()
     points = build_space(cfg.kernels, cfg.sizes)
-    mcfg = cfg.mapper_config()
-    cfg_dict = dataclasses.asdict(mcfg)
     cache = MappingCache(cfg.cache_dir) if cfg.cache_dir else None
+    # session arch is just the default; compile_many spans cfg.sizes
+    arch = tuple(cfg.sizes[0]) if cfg.sizes else "2x2"
+    tc = Toolchain(arch, cfg.mapper_config(), cache=cache,
+                   oracle="assembler")
+    results = tc.compile_many(cfg.kernels, grids=cfg.sizes, jobs=cfg.jobs)
 
-    # resolve cache hits up front; only misses go to the pool
-    results: Dict[DesignPoint, Tuple[MapResult, float, bool]] = {}
-    pending: List[DesignPoint] = []
-    keys: Dict[DesignPoint, str] = {}
-    programs = {k: kernel_program(k) for k in cfg.kernels}
-    for pt in points:
-        if cache is None:
-            pending.append(pt)
-            continue
-        dfg = programs[pt.kernel].build_dfg()
-        grid = make_grid(pt.rows, pt.cols)
-        keys[pt] = mapping_cache_key(dfg, grid, mcfg, extra=ORACLE_TAG)
-        stored = cache.get(keys[pt])
-        if stored is not None:
-            results[pt] = (MapResult.from_dict(dfg, grid, stored), 0.0, True)
-        else:
-            pending.append(pt)
-
-    errors: Dict[DesignPoint, Dict] = {}
-    if pending:
-        tasks = [(pt.kernel, pt.rows, pt.cols, cfg_dict) for pt in pending]
-        jobs = cfg.jobs if cfg.jobs is not None else (os.cpu_count() or 1)
-        jobs = max(1, min(jobs, len(tasks)))
-        if jobs == 1:
-            outs = [_solve_point(t) for t in tasks]
-        else:
-            with ProcessPoolExecutor(max_workers=jobs) as pool:
-                outs = list(pool.map(_solve_point, tasks))
-        for pt, out in zip(pending, outs):
-            if "error" in out:
-                errors[pt] = out
-                continue
-            dfg = programs[pt.kernel].build_dfg()
-            grid = make_grid(pt.rows, pt.cols)
-            res = MapResult.from_dict(dfg, grid, out["result"])
-            results[pt] = (res, out["map_time_s"], False)
-            if cache is not None and res.status != "timeout":
-                cache.put(keys[pt], out["result"])
-
-    rows: List[Dict] = []
-    for pt in points:  # deterministic kernel-major emission order
-        if pt in errors:
-            rows.append({"kernel": pt.kernel, "size": pt.size,
-                         "rows": pt.rows, "cols": pt.cols,
-                         "num_pes": pt.num_pes, "status": "error",
-                         "ii": None, "error": errors[pt]["error"],
-                         "map_time_s": round(errors[pt]["map_time_s"], 4),
-                         "cache_hit": False})
-            continue
-        res, dt, hit = results[pt]
-        rows.append(_record(pt, res, dt, hit, programs[pt.kernel]))
-
+    rows = [_record(pt, cr) for pt, cr in zip(points, results)]
+    errors = sum(1 for r in rows if r["status"] == "error")
     doc = {
         "bench": "dse",
         "backend": resolve_backend(cfg.backend),
@@ -187,7 +111,7 @@ def run_sweep(cfg: Optional[SweepConfig] = None) -> Dict:
         "pareto": pareto_analysis(rows),
         "cache": (cache.stats() if cache is not None
                   else {"dir": None, "hits": 0, "misses": 0}),
-        "errors": len(errors),
+        "errors": errors,
         "wall_time_s": round(time.monotonic() - t0, 3),
     }
     return doc

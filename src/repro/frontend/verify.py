@@ -1,14 +1,16 @@
 """Differential co-simulation: prove traced mappings correct by execution.
 
-For a traced kernel the harness (1) legalizes it, (2) SAT-maps it with the
-bitstream assembler as CEGAR oracle (``map_for_execution``), (3) asserts
-the achieved II is within the KMS upper bound (``kms_ii_upper_bound`` —
-beyond it modulo scheduling degenerated, which means the front-end emitted
-a broken DFG), (4) assembles the bitstream and executes it on the JAX
-PE-array simulator over a *batch* of randomized input memories, and (5)
-compares every result carry and the entire final data memory bit-exactly
-against the plain-Python reference (``python_reference`` — the same loop
-body run on concrete int32 values, independent of the legalizer).
+A thin wrapper over one :class:`repro.toolchain.Toolchain` session per
+kernel: the harness (1) legalizes it (the session's ``program`` stage),
+(2) SAT-maps it with the bitstream assembler as CEGAR oracle (the ``map``
+stage), (3) asserts the achieved II is within the KMS upper bound
+(``kms_ii_upper_bound`` — beyond it modulo scheduling degenerated, which
+means the front-end emitted a broken DFG), (4) executes the bitstream on
+the JAX PE-array simulator (the ``simulate`` stage) over a *batch* of
+randomized input memories, and (5) compares every result carry and the
+entire final data memory bit-exactly against the plain-Python reference
+(``python_reference`` — the same loop body run on concrete int32 values,
+independent of the legalizer).  Only the comparison logic lives here.
 
 A front-end lowering bug, an encoder regression, or a scheduler/routing
 bug all surface as an execution mismatch here — caught by running the
@@ -35,9 +37,9 @@ from typing import Dict, List, Optional, Sequence
 
 import numpy as np
 
-from ..cgra.arch import make_grid
 from ..core.mapper import MapperConfig
 from ..core.schedule import kms_ii_upper_bound
+from ..toolchain.session import Toolchain
 from .ir import M32
 
 # generous per-kernel budget: nightly uses it as-is; the tier-1 test passes
@@ -78,18 +80,15 @@ def cosimulate(tk, rows: int = 4, cols: int = 4, seeds: int = 16,
                execute: bool = True) -> CoSimReport:
     """Map one traced kernel and (optionally) execute it against the
     reference over ``seeds`` randomized inputs; see the module docstring."""
-    from ..cgra.simulator import map_for_execution
-
-    program = tk.build()
-    dfg = program.build_dfg()
-    grid = make_grid(rows, cols)
-    bound = kms_ii_upper_bound(dfg, grid.num_pes)
     cfg = config or DEFAULT_CONFIG
+    tc = Toolchain((rows, cols), cfg)
+    art = tc.program(tk)
+    bound = kms_ii_upper_bound(art.dfg, tc.grid.num_pes)
     t0 = time.monotonic()
-    res = map_for_execution(program, grid, cfg)
+    res = tc.map(art)
     rep = CoSimReport(
         kernel=tk.name, status="", mii=res.mii, ii_bound=bound,
-        nodes=dfg.num_nodes, edges=dfg.num_edges,
+        nodes=art.dfg.num_nodes, edges=art.dfg.num_edges,
         map_time_s=round(time.monotonic() - t0, 3),
         cegar_rounds=res.cegar_rounds, backend=res.backend)
     if res.mapping is None:
@@ -103,15 +102,14 @@ def cosimulate(tk, rows: int = 4, cols: int = 4, seeds: int = 16,
         rep.status = "mapped"
         return rep
 
-    from ..cgra.simulator import simulate  # needs the jax extra
-
     mems = np.stack([tk.make_mem(seed) for seed in range(seeds)])
-    sim = simulate(program, res.mapping, mems, batch=seeds, backend=backend)
+    # the session's simulate stage needs the jax extra
+    sim = tc.simulate(art, res.mapping, mems, batch=seeds, backend=backend)
     rep.seeds = seeds
     for b in range(seeds):
         ref_vals, ref_mem = tk.reference([int(v) for v in mems[b]])
         for name, exp in ref_vals.items():
-            node = program.result_nodes[name]
+            node = art.builder.result_nodes[name]
             got = int(sim.node_values[node][b]) & M32
             if got != exp & M32:
                 rep.mismatches.append(

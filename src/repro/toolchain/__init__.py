@@ -1,0 +1,34 @@
+"""Unified compilation-session API: one staged pipeline from kernel to
+metrics (paper Fig. 4, exposed as a real API).
+
+Quickstart::
+
+    from repro.toolchain import Toolchain
+
+    tc = Toolchain("4x4")
+    result = tc.compile("dotprod")      # source -> map -> asm -> metrics
+    print(result.ii, result.metrics.cycles)
+
+Every stage (``program`` / ``map`` / ``assemble`` / ``metrics`` /
+``simulate``) is also callable on its own and returns a typed artifact;
+``compile_many`` fans kernels x grids through the process pool and the
+content-addressed mapping cache.  The DSE sweep, the co-simulation
+harness, the benchmark lanes and the ``python -m repro`` CLI are all
+thin consumers of this package.
+"""
+
+from .artifacts import STAGES, CompileResult, Program, StageError
+from .oracles import ORACLE_TAG, assembler_oracle, resolve_oracle
+from .session import Toolchain, resolve_arch
+
+__all__ = [
+    "STAGES",
+    "CompileResult",
+    "Program",
+    "StageError",
+    "ORACLE_TAG",
+    "assembler_oracle",
+    "resolve_oracle",
+    "Toolchain",
+    "resolve_arch",
+]

@@ -1,0 +1,213 @@
+"""Typed stage artifacts of the compilation session.
+
+Every :class:`~repro.toolchain.session.Toolchain` stage returns one of
+these instead of a bare tuple, and a failed ``compile()`` records *which*
+stage died (``CompileResult.stage``) so callers never have to guess
+whether a kernel was unmappable, timed out in the solver, or crashed in
+code generation.
+
+Stage order (the paper's Fig. 4 flow, plus run-time metrics)::
+
+    source -> Program -> MapResult -> AssembledCIL -> RuntimeMetrics
+                                                   -> SimResult (co-sim)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+from ..cgra.arch import PEGrid
+from ..cgra.bitstream import AssembledCIL
+from ..cgra.energy import RuntimeMetrics
+from ..core.dfg import DFG
+from ..core.mapper import MapResult
+from ..core.mapping import Mapping
+
+# canonical stage names, in pipeline order
+STAGES = ("source", "map", "assemble", "metrics", "simulate")
+
+
+class StageError(RuntimeError):
+    """A pipeline stage failed; ``.stage`` names the culprit."""
+
+    def __init__(
+        self,
+        stage: str,
+        message: str,
+        cause: Optional[BaseException] = None,
+    ):
+        super().__init__(f"[{stage}] {message}")
+        self.stage = stage
+        self.message = message
+        self.cause = cause
+
+    def error_text(self) -> str:
+        """The ``"TypeName: msg"`` (or bare-message) form every consumer
+        stores in ``CompileResult.error`` — one shape on every path."""
+        if self.cause is not None:
+            return format_error(self.cause)
+        return self.message
+
+
+@dataclass
+class Program:
+    """Stage-1 artifact: a mappable kernel with its DFG already built.
+
+    ``builder`` is the :class:`~repro.cgra.programs.LoopBuilder` needed by
+    the assemble/metrics/simulate stages; DFG-only sources (the synthetic
+    Table-3 graphs) leave it ``None`` and stop the pipeline after ``map``.
+    """
+
+    name: str
+    origin: str  # "handwritten" | "traced" | "inline" | "dfg"
+    dfg: DFG
+    builder: Optional[object] = None  # LoopBuilder
+    make_mem: Optional[object] = None  # seed -> (M,) int32 input image
+
+    @property
+    def mappable_only(self) -> bool:
+        return self.builder is None
+
+    def __repr__(self) -> str:  # keep session logs readable
+        return (
+            f"Program({self.name!r}, origin={self.origin!r}, "
+            f"nodes={self.dfg.num_nodes}, edges={self.dfg.num_edges})"
+        )
+
+
+@dataclass
+class CompileResult:
+    """End-to-end artifact bundle of one ``Toolchain.compile()`` call.
+
+    ``status`` is ``"ok"`` when every stage ran; otherwise it carries the
+    map-stage verdict (``"unsat-capped"`` / ``"timeout"``) or ``"error"``
+    for an exception, with ``stage`` naming where the pipeline stopped and
+    ``error`` the formatted cause.
+    """
+
+    kernel: str
+    rows: int
+    cols: int
+    status: str
+    stage: Optional[str] = None
+    program: Optional[Program] = None
+    map_result: Optional[MapResult] = None
+    asm: Optional[AssembledCIL] = None
+    metrics: Optional[RuntimeMetrics] = None
+    error: Optional[str] = None
+    cache_hit: bool = False
+    timings: Dict[str, float] = field(default_factory=dict)
+
+    @property
+    def ok(self) -> bool:
+        return self.status == "ok"
+
+    @property
+    def size(self) -> str:
+        return f"{self.rows}x{self.cols}"
+
+    @property
+    def mapping(self) -> Optional[Mapping]:
+        return self.map_result.mapping if self.map_result else None
+
+    @property
+    def ii(self) -> Optional[int]:
+        return self.map_result.ii if self.map_result else None
+
+    @property
+    def mii(self) -> Optional[int]:
+        return self.map_result.mii if self.map_result else None
+
+    @property
+    def map_time_s(self) -> float:
+        return self.timings.get("map", 0.0)
+
+    # -- serialization (process-pool transfer, CLI JSON) -------------------
+
+    def to_dict(self) -> Dict:
+        map_result = self.map_result.to_dict() if self.map_result else None
+        metrics = self.metrics.to_dict() if self.metrics else None
+        return {
+            "kernel": self.kernel,
+            "rows": self.rows,
+            "cols": self.cols,
+            "status": self.status,
+            "stage": self.stage,
+            "error": self.error,
+            "cache_hit": self.cache_hit,
+            "timings": {k: round(v, 6) for k, v in self.timings.items()},
+            "map_result": map_result,
+            "metrics": metrics,
+        }
+
+    @classmethod
+    def from_dict(
+        cls,
+        d: Dict,
+        dfg: Optional[DFG] = None,
+        grid: Optional[PEGrid] = None,
+        program: Optional[Program] = None,
+    ) -> "CompileResult":
+        """Rebuild from :meth:`to_dict` output.  ``dfg``/``grid`` (or a
+        ``program`` plus ``grid``) are needed to revive the mapping; the
+        ``asm`` artifact is not serialized — re-run the assemble stage if
+        it is needed on this side of the pickle boundary."""
+        if dfg is None and program is not None:
+            dfg = program.dfg
+        map_result = None
+        if d.get("map_result") is not None:
+            if dfg is None or grid is None:
+                msg = (
+                    "CompileResult.from_dict needs dfg+grid (or "
+                    "program+grid) to revive a MapResult"
+                )
+                raise ValueError(msg)
+            map_result = MapResult.from_dict(dfg, grid, d["map_result"])
+        metrics = None
+        if d.get("metrics"):
+            metrics = RuntimeMetrics(**d["metrics"])
+        return cls(
+            kernel=d["kernel"],
+            rows=d["rows"],
+            cols=d["cols"],
+            status=d["status"],
+            stage=d.get("stage"),
+            program=program,
+            map_result=map_result,
+            metrics=metrics,
+            error=d.get("error"),
+            cache_hit=d.get("cache_hit", False),
+            timings=dict(d.get("timings", {})),
+        )
+
+    def summary(self) -> Dict:
+        """Flat JSON-ready digest (the ``repro map --json`` document)."""
+        times = {k: round(v, 4) for k, v in self.timings.items()}
+        out = {
+            "kernel": self.kernel,
+            "grid": self.size,
+            "status": self.status,
+            "stage": self.stage,
+            "error": self.error,
+            "cache_hit": self.cache_hit,
+            "ii": self.ii,
+            "mii": self.mii,
+            "stage_times_s": times,
+        }
+        if self.map_result is not None:
+            out["backend"] = self.map_result.backend
+            out["map_status"] = self.map_result.status
+            out["cegar_rounds"] = self.map_result.cegar_rounds
+            out["attempts"] = len(self.map_result.attempts)
+        if self.mapping is not None:
+            out["utilization"] = round(self.mapping.utilization, 4)
+        if self.metrics is not None:
+            out["metrics"] = self.metrics.to_dict()
+        return out
+
+
+def format_error(exc: BaseException) -> str:
+    """The one error-string format every consumer (sweep rows, CLI JSON)
+    shares: ``"TypeName: message"``."""
+    return f"{type(exc).__name__}: {exc}"

@@ -1,0 +1,157 @@
+"""``python -m repro`` — the single user entry point to the toolchain.
+
+Subcommands::
+
+    repro map KERNEL --grid 4x4 [--json] [--out F]   one kernel -> metrics
+    repro cosim [...]    differential co-simulation (repro.frontend args)
+    repro sweep [...]    design-space sweep          (repro.dse args)
+    repro list [--origin handwritten|traced]         registered kernels
+
+``map`` compiles one registry kernel end-to-end through a
+:class:`~repro.toolchain.session.Toolchain` session and prints either a
+human summary or the JSON digest (``--json``); the CI ``toolchain-smoke``
+step gates that digest against the committed
+``results/BENCH_toolchain_map.json`` baseline.  ``cosim`` and ``sweep``
+forward their remaining arguments to the existing ``repro.frontend`` and
+``repro.dse`` CLIs unchanged.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from typing import List, Optional
+
+from ..core.mapper import MapperConfig
+from .session import Toolchain
+
+
+def _cmd_map(args) -> int:
+    cfg = MapperConfig(
+        backend=args.backend,
+        per_ii_timeout_s=args.timeout / 2,
+        total_timeout_s=args.timeout,
+        ii_max=args.ii_max,
+    )
+    oracle = None if args.no_oracle else "assembler"
+    tc = Toolchain(args.grid, cfg, cache=args.cache_dir, oracle=oracle)
+    t0 = time.monotonic()
+    cr = tc.compile(args.kernel)
+    doc = cr.summary()
+    doc["bench"] = "toolchain_map"
+    doc["oracle"] = tc.oracle_tag
+    doc["wall_time_s"] = round(time.monotonic() - t0, 4)
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as fh:
+            json.dump(doc, fh, indent=1, sort_keys=True)
+    if args.json:
+        print(json.dumps(doc, indent=1, sort_keys=True))
+    else:
+        _print_human(cr)
+    return 0 if cr.ok else 1
+
+
+def _print_human(cr) -> None:
+    if cr.ok:
+        m = cr.metrics
+        hit = " (cache hit)" if cr.cache_hit else ""
+        print(
+            f"{cr.kernel} @ {cr.size}: II={cr.ii} (mII={cr.mii}) "
+            f"backend={cr.map_result.backend} "
+            f"cegar={cr.map_result.cegar_rounds}"
+        )
+        print(
+            f"  cycles={m.cycles} energy={m.energy_nj:.2f}nJ "
+            f"utilization={m.utilization:.3f} "
+            f"map_time={cr.map_time_s:.2f}s{hit}"
+        )
+    else:
+        why = f" — {cr.error}" if cr.error else ""
+        print(f"{cr.kernel} @ {cr.size}: {cr.status} at stage {cr.stage!r}{why}")
+
+
+def _cmd_list(args) -> int:
+    from ..cgra.registry import get_kernel, kernel_names
+
+    names = kernel_names(origin=args.origin or None)
+    for name in names:
+        spec = get_kernel(name)
+        print(f"{name:16s} {spec.origin}")
+    print(f"{len(names)} kernels")
+    return 0
+
+
+def main(argv: Optional[List[str]] = None) -> int:
+    argv = list(sys.argv[1:] if argv is None else argv)
+    # cosim/sweep forward verbatim to the existing sub-CLIs; dispatch
+    # before argparse so their own flags (argparse's REMAINDER chokes on
+    # a leading dash) and --help reach the right parser
+    if argv and argv[0] == "cosim":
+        from ..frontend.verify import main as cosim_main
+
+        return cosim_main(argv[1:])
+    if argv and argv[0] == "sweep":
+        from ..dse.cli import main as sweep_main
+
+        return sweep_main(argv[1:])
+
+    ap = argparse.ArgumentParser(
+        prog="python -m repro",
+        description="SAT-MapIt toolchain: map, co-simulate, sweep",
+    )
+    sub = ap.add_subparsers(dest="cmd", required=True)
+
+    mp = sub.add_parser("map", help="compile one kernel to metrics")
+    mp.add_argument("kernel", help="registered kernel name (see: repro list)")
+    mp.add_argument("--grid", default="4x4", help="CGRA size (default 4x4)")
+    mp.add_argument("--backend", default="auto", choices=["auto", "cdcl", "z3"])
+    mp.add_argument(
+        "--timeout",
+        type=float,
+        default=120.0,
+        help="total mapping budget in seconds (default 120)",
+    )
+    mp.add_argument("--ii-max", type=int, default=32)
+    mp.add_argument(
+        "--json",
+        action="store_true",
+        help="print the JSON digest instead of a summary",
+    )
+    mp.add_argument("--out", default=None, help="also write the digest here")
+    mp.add_argument(
+        "--cache-dir",
+        default=None,
+        help="reuse a content-addressed mapping cache",
+    )
+    mp.add_argument(
+        "--no-oracle",
+        action="store_true",
+        help="disable the assembler CEGAR oracle",
+    )
+    mp.set_defaults(fn=_cmd_map)
+
+    sub.add_parser(
+        "cosim",
+        add_help=False,
+        help="differential co-simulation (forwards to repro.frontend)",
+    )
+    sub.add_parser(
+        "sweep",
+        add_help=False,
+        help="design-space sweep (forwards to repro.dse; try --smoke)",
+    )
+
+    lp = sub.add_parser("list", help="list registered kernels")
+    lp.add_argument("--origin", default=None, choices=["handwritten", "traced"])
+    lp.set_defaults(fn=_cmd_list)
+
+    args = ap.parse_args(argv)
+    return args.fn(args)
+
+
+if __name__ == "__main__":
+    sys.exit(main())

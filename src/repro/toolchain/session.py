@@ -1,0 +1,471 @@
+"""The compilation session: one staged pipeline from kernel to metrics.
+
+:class:`Toolchain` binds an architecture, a :class:`MapperConfig`, an
+optional content-addressed mapping cache, and a CEGAR oracle, then
+exposes the paper's flow (Fig. 4) as explicit, individually-inspectable
+stages::
+
+    tc = Toolchain("4x4", MapperConfig(backend="cdcl"))
+    prog = tc.program("dotprod")     # source  -> Program
+    res = tc.map(prog)               # Program -> MapResult (SAT + CEGAR)
+    asm = tc.assemble(prog, res.mapping)    # -> AssembledCIL
+    m = tc.metrics(prog, res.mapping, asm)  # -> RuntimeMetrics
+
+``compile()`` runs the stages end-to-end into a :class:`CompileResult`
+whose ``stage`` field names where a failing pipeline died;
+``compile_many()`` fans a kernels x grids cross product through the
+process pool with cache hits resolved in the parent — the engine under
+``repro.dse`` sweeps and the ``python -m repro`` CLI.
+
+Sources accepted by the ``program`` stage: a registry kernel name, a
+:class:`~repro.cgra.programs.LoopBuilder`, a traced kernel
+(``repro.frontend.kernels.TracedKernel``), a bare
+:class:`~repro.core.dfg.DFG` (map-only), or an existing
+:class:`Program`.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import os
+import time
+from concurrent.futures import ProcessPoolExecutor
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+from ..cgra.arch import PEGrid, make_grid
+from ..cgra.bitstream import AssembledCIL, assemble
+from ..cgra.energy import RuntimeMetrics, runtime_metrics
+from ..core.dfg import DFG
+from ..core.mapper import (
+    MapperConfig,
+    MapResult,
+    map_dfg_cached,
+    mapping_cache_key,
+)
+from ..core.mapping import Mapping
+from .artifacts import CompileResult, Program, StageError, format_error
+from .oracles import assembler_oracle, resolve_oracle
+
+ArchLike = Union[PEGrid, str, Tuple[int, int]]
+
+PointKey = Tuple[str, int, int]  # (kernel, rows, cols)
+
+
+def resolve_arch(arch: ArchLike) -> PEGrid:
+    """``PEGrid`` | ``"4x4"`` | ``(4, 4)`` -> :class:`PEGrid`."""
+    if isinstance(arch, PEGrid):
+        return arch
+    if isinstance(arch, str):
+        r, _, c = arch.lower().partition("x")
+        return make_grid(int(r), int(c))
+    rows, cols = arch
+    return make_grid(int(rows), int(cols))
+
+
+class Toolchain:
+    """A compilation session over one architecture + mapper config.
+
+    ``cache`` is a :class:`~repro.dse.cache.MappingCache`, a directory
+    path (one is created there), or ``None``; only the map stage is
+    cached, keyed by DFG + arch + config + oracle tag.  ``oracle`` is
+    ``"assembler"`` (default), ``None``, or a custom factory — see
+    :mod:`repro.toolchain.oracles`.
+    """
+
+    def __init__(
+        self,
+        arch: ArchLike = "4x4",
+        config: Optional[MapperConfig] = None,
+        *,
+        cache=None,
+        oracle="assembler",
+    ):
+        self.grid = resolve_arch(arch)
+        self.config = config or MapperConfig()
+        if isinstance(cache, str):
+            from ..dse.cache import MappingCache
+
+            cache = MappingCache(cache)
+        self.cache = cache
+        self.oracle_tag, self._oracle_factory = resolve_oracle(oracle)
+        self.last_cache_hit = False
+
+    # -- stage 1: source -> Program ----------------------------------------
+
+    def program(self, source) -> Program:
+        """Resolve any supported source into a :class:`Program`."""
+        try:
+            return self._resolve_program(source)
+        except StageError:
+            raise
+        except Exception as e:
+            raise StageError("source", format_error(e), cause=e) from e
+
+    def _resolve_program(self, source) -> Program:
+        if isinstance(source, Program):
+            return source
+        if isinstance(source, str):
+            from ..cgra.registry import get_kernel
+
+            spec = get_kernel(source)
+            builder = spec.factory()
+            return Program(
+                name=source,
+                origin=spec.origin,
+                dfg=builder.build_dfg(),
+                builder=builder,
+                make_mem=spec.make_mem,
+            )
+        if isinstance(source, DFG):
+            return Program(name=source.name, origin="dfg", dfg=source)
+        if hasattr(source, "spec") and hasattr(source, "build"):
+            # TracedKernel: legalize to a fresh LoopBuilder
+            builder = source.build()
+            return Program(
+                name=source.name,
+                origin="traced",
+                dfg=builder.build_dfg(),
+                builder=builder,
+                make_mem=getattr(source, "make_mem", None),
+            )
+        if hasattr(source, "build_dfg"):
+            # a LoopBuilder handed in directly
+            return Program(
+                name=getattr(source, "name", "<inline>"),
+                origin="inline",
+                dfg=source.build_dfg(),
+                builder=source,
+            )
+        msg = (
+            f"unsupported kernel source {type(source).__name__}: expected "
+            "a registry name, LoopBuilder, TracedKernel, DFG or Program"
+        )
+        raise StageError("source", msg)
+
+    # -- stage 2: Program -> MapResult -------------------------------------
+
+    def map(
+        self,
+        source,
+        ii_start: Optional[int] = None,
+        config: Optional[MapperConfig] = None,
+    ) -> MapResult:
+        """SAT-map with the session's CEGAR oracle and cache wired in.
+        ``self.last_cache_hit`` records whether the cache answered."""
+        prog = self.program(source)
+        res, hit = self._map_cached(prog, ii_start=ii_start, config=config)
+        self.last_cache_hit = hit
+        return res
+
+    def _oracle_check(self, prog: Program):
+        if self._oracle_factory is None or prog.builder is None:
+            return None
+        return self._oracle_factory(prog.builder)
+
+    def _cache_key(self, prog: Program, cfg: MapperConfig, oracled: bool) -> str:
+        extra = self.oracle_tag if oracled else ""
+        return mapping_cache_key(prog.dfg, self.grid, cfg, extra=extra)
+
+    def _map_cached(
+        self,
+        prog: Program,
+        ii_start: Optional[int] = None,
+        config: Optional[MapperConfig] = None,
+    ) -> Tuple[MapResult, bool]:
+        cfg = config or self.config
+        check = self._oracle_check(prog)
+        extra = self.oracle_tag if check is not None else ""
+        return map_dfg_cached(
+            prog.dfg,
+            self.grid,
+            cfg,
+            cache=self.cache,
+            assemble_check=check,
+            cache_extra=extra,
+            ii_start=ii_start,
+        )
+
+    # -- stage 3: Mapping -> AssembledCIL ----------------------------------
+
+    def assemble(self, source, mapping: Mapping) -> AssembledCIL:
+        prog = self.program(source)
+        if prog.builder is None:
+            msg = (
+                f"{prog.name!r} is a bare DFG (origin={prog.origin!r}): "
+                "code generation needs a LoopBuilder program"
+            )
+            raise StageError("assemble", msg)
+        try:
+            return assemble(prog.builder, mapping)
+        except Exception as e:
+            raise StageError("assemble", format_error(e), cause=e) from e
+
+    # -- stage 4: AssembledCIL -> RuntimeMetrics ---------------------------
+
+    def metrics(
+        self,
+        source,
+        mapping: Mapping,
+        asm: Optional[AssembledCIL] = None,
+    ) -> RuntimeMetrics:
+        """Calibrated latency/energy model over the assembled grid (no
+        JAX).  Re-assembles unless the stage-3 artifact is passed in."""
+        if asm is None:
+            asm = self.assemble(source, mapping)
+        try:
+            return runtime_metrics(
+                asm,
+                num_cols=self.grid.spec.cols,
+                utilization=mapping.utilization,
+            )
+        except Exception as e:
+            raise StageError("metrics", format_error(e), cause=e) from e
+
+    # -- stage 5 (optional): execute on the PE-array simulator -------------
+
+    def simulate(
+        self,
+        source,
+        mapping: Mapping,
+        mem,
+        batch: int = 1,
+        backend: str = "ref",
+    ):
+        """Run the mapped bitstream on the JAX PE-array simulator
+        (requires the ``jax`` extra); returns a
+        :class:`~repro.cgra.simulator.SimResult`."""
+        prog = self.program(source)
+        if prog.builder is None:
+            msg = (
+                f"{prog.name!r} is a bare DFG: execution needs a "
+                "LoopBuilder program"
+            )
+            raise StageError("simulate", msg)
+        try:
+            from ..cgra.simulator import simulate
+
+            return simulate(prog.builder, mapping, mem, batch=batch, backend=backend)
+        except StageError:
+            raise
+        except Exception as e:
+            raise StageError("simulate", format_error(e), cause=e) from e
+
+    # -- end-to-end --------------------------------------------------------
+
+    def compile(
+        self,
+        source,
+        ii_start: Optional[int] = None,
+        config: Optional[MapperConfig] = None,
+    ) -> CompileResult:
+        """source -> map -> assemble -> metrics, never raising: failures
+        come back as a :class:`CompileResult` with ``stage`` set."""
+        rows, cols = self.grid.spec.rows, self.grid.spec.cols
+        timings: Dict[str, float] = {}
+        if isinstance(source, str):
+            kernel = source
+        else:
+            kernel = getattr(source, "name", type(source).__name__)
+        t0 = time.monotonic()
+        try:
+            prog = self.program(source)
+        except StageError as e:
+            return CompileResult(
+                kernel=kernel,
+                rows=rows,
+                cols=cols,
+                status="error",
+                stage=e.stage,
+                error=e.error_text(),
+                timings={"source": time.monotonic() - t0},
+            )
+        timings["source"] = time.monotonic() - t0
+        cr = CompileResult(
+            kernel=prog.name,
+            rows=rows,
+            cols=cols,
+            status="error",
+            program=prog,
+            timings=timings,
+        )
+
+        t0 = time.monotonic()
+        try:
+            res, hit = self._map_cached(prog, ii_start=ii_start, config=config)
+        except Exception as e:
+            timings["map"] = time.monotonic() - t0
+            cr.stage, cr.error = "map", format_error(e)
+            return cr
+        timings["map"] = time.monotonic() - t0
+        cr.map_result, cr.cache_hit = res, hit
+        if res.mapping is None:
+            cr.status, cr.stage = res.status, "map"
+            return cr
+
+        return self._finish(cr)
+
+    def _finish(self, cr: CompileResult) -> CompileResult:
+        """Run the post-map stages on an already-mapped result (also used
+        by ``compile_many`` for cache hits and pool returns)."""
+        prog, mapping = cr.program, cr.mapping
+        t0 = time.monotonic()
+        try:
+            cr.asm = self.assemble(prog, mapping)
+        except StageError as e:
+            cr.timings["assemble"] = time.monotonic() - t0
+            cr.status, cr.stage = "error", e.stage
+            cr.error = e.error_text()
+            return cr
+        cr.timings["assemble"] = time.monotonic() - t0
+        t0 = time.monotonic()
+        try:
+            cr.metrics = self.metrics(prog, mapping, cr.asm)
+        except StageError as e:
+            cr.timings["metrics"] = time.monotonic() - t0
+            cr.status, cr.stage = "error", e.stage
+            cr.error = e.error_text()
+            return cr
+        cr.timings["metrics"] = time.monotonic() - t0
+        cr.status, cr.stage, cr.error = "ok", None, None
+        return cr
+
+    # -- fan-out -----------------------------------------------------------
+
+    def compile_many(
+        self,
+        kernels: Sequence[str],
+        grids: Optional[Sequence[ArchLike]] = None,
+        jobs: Optional[int] = None,
+        config: Optional[MapperConfig] = None,
+    ) -> List[CompileResult]:
+        """Compile a kernels x grids cross product (kernel-major order).
+
+        Kernels must be registry names (the tasks cross a process-pool
+        pickle boundary).  Cache hits are resolved in the parent and skip
+        solving entirely; misses fan out to a ``ProcessPoolExecutor``
+        (``os.cpu_count()``-bounded; ``jobs=1`` runs inline).  Solved
+        points are written back to the cache by the parent.  Post-map
+        stages always run in the parent — they are cheap and keep worker
+        payloads to plain dicts.
+        """
+        cfg = config or self.config
+        if grids is None:
+            grids = [self.grid]
+        grid_list = [resolve_arch(g) for g in grids]
+        sessions = {}
+        for g in grid_list:
+            sessions[(g.spec.rows, g.spec.cols)] = self._sibling(g)
+        programs = {k: self.program(k) for k in kernels}
+        points: List[PointKey] = []
+        for k in kernels:
+            for g in grid_list:
+                points.append((k, g.spec.rows, g.spec.cols))
+
+        # resolve cache hits up front; only misses go to the pool
+        done: Dict[PointKey, CompileResult] = {}
+        pending: List[PointKey] = []
+        keys: Dict[PointKey, str] = {}
+        for pt in points:
+            kernel, rows, cols = pt
+            tc = sessions[(rows, cols)]
+            prog = programs[kernel]
+            if self.cache is None:
+                pending.append(pt)
+                continue
+            check = tc._oracle_check(prog)
+            keys[pt] = tc._cache_key(prog, cfg, oracled=check is not None)
+            stored = self.cache.get(keys[pt])
+            if stored is None:
+                pending.append(pt)
+                continue
+            res = MapResult.from_dict(prog.dfg, tc.grid, stored)
+            cr = CompileResult(
+                kernel=kernel,
+                rows=rows,
+                cols=cols,
+                status="error",
+                program=prog,
+                map_result=res,
+                cache_hit=True,
+                timings={"map": 0.0},
+            )
+            if res.mapping is None:
+                cr.status, cr.stage = res.status, "map"
+                done[pt] = cr
+            else:
+                done[pt] = tc._finish(cr)
+
+        if pending:
+            cfg_dict = dataclasses.asdict(cfg)
+            if self._oracle_factory is None:
+                oracle = None
+            elif self._oracle_factory is assembler_oracle:
+                oracle = "assembler"
+            else:
+                # custom oracle: ship (tag, factory) to the workers; the
+                # factory must be picklable (module-level) for jobs > 1
+                oracle = (self.oracle_tag, self._oracle_factory)
+            tasks = [(k, r, c, cfg_dict, oracle) for k, r, c in pending]
+            n = jobs if jobs is not None else (os.cpu_count() or 1)
+            n = max(1, min(n, len(tasks)))
+            if n == 1:
+                outs = [_map_point(t) for t in tasks]
+            else:
+                with ProcessPoolExecutor(max_workers=n) as pool:
+                    outs = list(pool.map(_map_point, tasks))
+            for pt, out in zip(pending, outs):
+                kernel, rows, cols = pt
+                tc = sessions[(rows, cols)]
+                prog = programs[kernel]
+                cr = CompileResult(
+                    kernel=kernel,
+                    rows=rows,
+                    cols=cols,
+                    status="error",
+                    program=prog,
+                    timings={"map": out["map_time_s"]},
+                )
+                if "error" in out:
+                    cr.stage, cr.error = "map", out["error"]
+                    done[pt] = cr
+                    continue
+                res = MapResult.from_dict(prog.dfg, tc.grid, out["result"])
+                cr.map_result = res
+                if self.cache is not None and res.status != "timeout":
+                    self.cache.put(keys[pt], out["result"])
+                if res.mapping is None:
+                    cr.status, cr.stage = res.status, "map"
+                    done[pt] = cr
+                else:
+                    done[pt] = tc._finish(cr)
+        return [done[pt] for pt in points]
+
+    def _sibling(self, grid: PEGrid) -> "Toolchain":
+        """Same session settings over a different grid (shared cache)."""
+        mine = (self.grid.spec.rows, self.grid.spec.cols)
+        if (grid.spec.rows, grid.spec.cols) == mine:
+            return self
+        if self._oracle_factory is None:
+            oracle = None
+        else:
+            oracle = (self.oracle_tag, self._oracle_factory)
+        return Toolchain(grid, self.config, cache=self.cache, oracle=oracle)
+
+
+def _map_point(task) -> Dict:
+    """Pool worker: one (kernel, grid) SAT mapping, oracle included.
+
+    Module-level (picklable) and self-contained: rebuilds the program,
+    grid and MapperConfig from plain values, returns plain dicts.  The
+    worker never touches the on-disk cache — the parent owns it.
+    """
+    kernel, rows, cols, cfg_dict, oracle = task
+    tc = Toolchain((rows, cols), MapperConfig(**cfg_dict), oracle=oracle)
+    prog = tc.program(kernel)
+    t0 = time.monotonic()
+    try:
+        res, _ = tc._map_cached(prog)
+    except Exception as e:  # surfaced as a per-point "error" row
+        dt = time.monotonic() - t0
+        return {"error": format_error(e), "map_time_s": dt}
+    return {"result": res.to_dict(), "map_time_s": time.monotonic() - t0}

@@ -1,0 +1,336 @@
+"""Toolchain compilation-session API: stage artifacts, end-to-end
+equivalence with the legacy call chain, cache determinism, stage-failure
+attribution, and the ``python -m repro`` CLI.
+
+Everything runs on the dependency-free CDCL backend with small grids so
+the whole module stays in tier-1 time budgets without z3/jax extras.
+"""
+import json
+
+import numpy as np
+import pytest
+
+from repro.cgra import make_grid
+from repro.cgra.arch import PEGrid
+from repro.cgra.registry import kernel_program
+from repro.cgra.simulator import map_for_execution
+from repro.core import MapperConfig
+from repro.core.dfg import running_example
+from repro.core.mapper import mapping_cache_key
+from repro.toolchain import (ORACLE_TAG, CompileResult, Program, StageError,
+                             Toolchain, assembler_oracle, resolve_arch,
+                             resolve_oracle)
+from repro.toolchain.cli import main as repro_main
+
+CDCL = MapperConfig(backend="cdcl", per_ii_timeout_s=10.0,
+                    total_timeout_s=30.0)
+
+# three registry kernels covering both origins; all map in well under a
+# second on 2x2/3x3 CDCL
+LEGACY_KERNELS = ["bitcount", "reversebits", "dotprod"]
+
+
+# ---------------------------------------------------------------------------
+# arch + oracle resolution
+# ---------------------------------------------------------------------------
+
+
+def test_resolve_arch_accepts_grid_string_tuple():
+    g = make_grid(3, 2)
+    assert resolve_arch(g) is g
+    for arch in ("3x2", (3, 2)):
+        r = resolve_arch(arch)
+        assert isinstance(r, PEGrid)
+        assert (r.spec.rows, r.spec.cols) == (3, 2)
+
+
+def test_resolve_oracle_variants():
+    tag, factory = resolve_oracle("assembler")
+    assert tag == ORACLE_TAG and factory is assembler_oracle
+    assert resolve_oracle(None) == ("", None)
+
+    def custom(program):
+        return lambda mapping: None
+
+    tag, factory = resolve_oracle(custom)
+    assert tag == "oracle=custom" and factory is custom
+    tag, factory = resolve_oracle(("oracle=v2", custom))
+    assert tag == "oracle=v2" and factory is custom
+    with pytest.raises(ValueError):
+        resolve_oracle(42)
+
+
+# ---------------------------------------------------------------------------
+# stage 1: program resolution
+# ---------------------------------------------------------------------------
+
+
+def test_program_stage_from_every_source_kind():
+    tc = Toolchain("2x2", CDCL)
+    by_name = tc.program("bitcount")
+    assert by_name.origin == "handwritten"
+    assert by_name.dfg.num_nodes > 0 and by_name.builder is not None
+    # idempotent: a Program passes through unchanged
+    assert tc.program(by_name) is by_name
+    # a LoopBuilder handed in directly
+    inline = tc.program(kernel_program("bitcount"))
+    assert inline.origin == "inline"
+    assert inline.dfg.num_nodes == by_name.dfg.num_nodes
+    # a traced kernel legalizes on the way in
+    from repro.frontend.kernels import TRACED_KERNELS
+
+    traced = tc.program(TRACED_KERNELS["dotprod"])
+    assert traced.origin == "traced" and traced.builder is not None
+    # a bare DFG is mappable but carries no program
+    dfg_only = tc.program(running_example())
+    assert dfg_only.origin == "dfg" and dfg_only.mappable_only
+
+
+def test_program_stage_unknown_kernel_attributes_source_stage():
+    tc = Toolchain("2x2", CDCL)
+    with pytest.raises(StageError) as ei:
+        tc.program("no-such-kernel")
+    assert ei.value.stage == "source"
+    cr = tc.compile("no-such-kernel")
+    assert cr.status == "error" and cr.stage == "source"
+    assert "no-such-kernel" in (cr.error or "")
+
+
+# ---------------------------------------------------------------------------
+# compile() == the legacy map_dfg + assemble + metrics chain
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kernel", LEGACY_KERNELS)
+def test_compile_matches_legacy_chain(kernel):
+    from repro.cgra.bitstream import assemble
+    from repro.cgra.energy import runtime_metrics
+
+    grid = make_grid(3, 3)
+    prog = kernel_program(kernel)
+    legacy = map_for_execution(prog, grid, CDCL)
+    assert legacy.mapping is not None
+
+    cr = Toolchain(grid, CDCL).compile(kernel)
+    assert cr.ok and cr.stage is None
+    assert cr.ii == legacy.ii and cr.mii == legacy.mii
+    assert cr.map_result.status == legacy.status
+    placements = {n: (p.pe, p.slot) for n, p in cr.mapping.placements.items()}
+    legacy_pl = {n: (p.pe, p.slot)
+                 for n, p in legacy.mapping.placements.items()}
+    assert placements == legacy_pl
+    legacy_asm = assemble(prog, legacy.mapping)
+    assert np.array_equal(cr.asm.words(), legacy_asm.words())
+    legacy_m = runtime_metrics(legacy_asm, num_cols=3,
+                               utilization=legacy.mapping.utilization)
+    assert cr.metrics.to_dict() == legacy_m.to_dict()
+
+
+def test_unsat_kernel_attributes_map_stage():
+    # sqrt needs more PEs than a 2x2 torus offers at any II <= ii_max
+    cr = Toolchain("2x2", CDCL).compile("sqrt")
+    assert cr.status == "unsat-capped"
+    assert cr.stage == "map"
+    assert cr.mapping is None and cr.asm is None and cr.metrics is None
+    assert cr.map_result is not None and cr.map_result.mii >= 1
+
+
+def test_dfg_only_source_stops_at_assemble():
+    tc = Toolchain("3x3", CDCL)
+    prog = tc.program(running_example())
+    res = tc.map(prog)
+    assert res.mapping is not None
+    with pytest.raises(StageError) as ei:
+        tc.assemble(prog, res.mapping)
+    assert ei.value.stage == "assemble"
+    cr = tc.compile(running_example())
+    assert cr.status == "error" and cr.stage == "assemble"
+    assert cr.map_result is not None  # the map artifact survives
+
+
+# ---------------------------------------------------------------------------
+# artifact round-trips
+# ---------------------------------------------------------------------------
+
+
+def test_compile_result_round_trip():
+    tc = Toolchain("2x2", CDCL)
+    cr = tc.compile("bitcount")
+    assert cr.ok
+    d = json.loads(json.dumps(cr.to_dict()))  # through real JSON
+    back = CompileResult.from_dict(d, program=cr.program, grid=tc.grid)
+    assert back.kernel == cr.kernel and back.status == "ok"
+    assert back.ii == cr.ii and back.mii == cr.mii
+    assert back.metrics.to_dict() == cr.metrics.to_dict()
+    assert back.mapping is not None
+    pl = {n: (p.pe, p.slot) for n, p in back.mapping.placements.items()}
+    assert pl == {n: (p.pe, p.slot)
+                  for n, p in cr.mapping.placements.items()}
+    # asm is deliberately not serialized; re-running the stage rebuilds it
+    assert back.asm is None
+    asm = tc.assemble(back.program, back.mapping)
+    assert np.array_equal(asm.words(), cr.asm.words())
+
+
+def test_compile_result_from_dict_needs_context_for_mapping():
+    cr = Toolchain("2x2", CDCL).compile("bitcount")
+    with pytest.raises(ValueError):
+        CompileResult.from_dict(cr.to_dict())
+
+
+# ---------------------------------------------------------------------------
+# compile_many: cache determinism + pool/inline equivalence
+# ---------------------------------------------------------------------------
+
+
+def _stable(cr: CompileResult) -> dict:
+    d = cr.to_dict()
+    d.pop("timings")
+    d.pop("cache_hit")
+    if d["map_result"]:
+        d["map_result"].pop("total_time_s")
+        d["map_result"].pop("attempts")
+    return d
+
+
+def test_compile_many_cache_hit_determinism(tmp_path):
+    tc = Toolchain("2x2", CDCL, cache=str(tmp_path / "cache"))
+    kernels = ["bitcount", "sqrt"]
+    first = tc.compile_many(kernels, grids=[(2, 2), (3, 3)], jobs=1)
+    assert [cr.cache_hit for cr in first] == [False] * 4
+    second = tc.compile_many(kernels, grids=[(2, 2), (3, 3)], jobs=1)
+    # every point — including the UNSAT one — replays from the cache
+    assert [cr.cache_hit for cr in second] == [True] * 4
+    assert [_stable(a) for a in first] == [_stable(b) for b in second]
+    assert tc.cache.stats()["hits"] == 4
+
+
+def test_compile_many_pool_matches_inline(tmp_path):
+    kernels = ["bitcount", "reversebits"]
+    inline = Toolchain("2x2", CDCL).compile_many(kernels, jobs=1)
+    pooled = Toolchain("2x2", CDCL).compile_many(kernels, jobs=2)
+    assert [_stable(a) for a in inline] == [_stable(b) for b in pooled]
+
+
+def _null_oracle(program):
+    """Picklable custom-oracle factory: accepts every mapping."""
+
+    def check(mapping):
+        return None
+
+    return check
+
+
+def test_compile_many_ships_custom_oracle_to_workers(tmp_path):
+    """A custom oracle must reach the pool path and cache under its own
+    tag — never be silently swapped for the assembler oracle."""
+    oracle = ("oracle=null", _null_oracle)
+    for jobs in (1, 2):
+        cache_dir = str(tmp_path / f"cache{jobs}")
+        tc = Toolchain("2x2", CDCL, cache=cache_dir, oracle=oracle)
+        results = tc.compile_many(["bitcount", "reversebits"], jobs=jobs)
+        assert all(cr.ok for cr in results)
+        prog = kernel_program("bitcount")
+        key = mapping_cache_key(prog.build_dfg(), make_grid(2, 2), CDCL,
+                                extra="oracle=null")
+        assert tc.cache.get(key) is not None
+
+
+def test_map_ii_start_does_not_alias_cache(tmp_path):
+    """ii_start changes the search, so it must key the cache too."""
+    tc = Toolchain("3x3", CDCL, cache=str(tmp_path / "cache"))
+    pinned = tc.map("bitcount", ii_start=4)
+    assert pinned.ii == 4
+    free = tc.map("bitcount")
+    assert not tc.last_cache_hit  # different key, not an alias
+    assert free.ii < 4
+    # both entries replay independently
+    assert tc.map("bitcount", ii_start=4).ii == 4
+    assert tc.last_cache_hit
+    assert tc.map("bitcount").ii == free.ii
+    assert tc.last_cache_hit
+
+
+def test_compile_many_cache_key_matches_dse_sweep(tmp_path):
+    """The session writes cache entries under the exact key the DSE sweep
+    has always used, so pre-toolchain caches stay valid."""
+    cache_dir = str(tmp_path / "cache")
+    tc = Toolchain("2x2", CDCL, cache=cache_dir)
+    tc.compile_many(["bitcount"], jobs=1)
+    prog = kernel_program("bitcount")
+    key = mapping_cache_key(prog.build_dfg(), make_grid(2, 2), CDCL,
+                            extra=ORACLE_TAG)
+    assert tc.cache.get(key) is not None
+
+
+# ---------------------------------------------------------------------------
+# MapperConfig.for_bench preset
+# ---------------------------------------------------------------------------
+
+
+def test_for_bench_preset_policy():
+    cfg = MapperConfig.for_bench()
+    assert (cfg.per_ii_timeout_s, cfg.total_timeout_s, cfg.ii_max) == \
+        (20.0, 40.0, 30)
+    cfg = MapperConfig.for_bench(per_ii_timeout_s=15.0)
+    assert cfg.total_timeout_s == 30.0  # 2x per-II unless pinned
+    cfg = MapperConfig.for_bench(backend="cdcl", amo="sequential",
+                                 symmetry_break=True, ii_max=40,
+                                 total_timeout_s=45.0)
+    assert cfg.backend == "cdcl" and cfg.amo == "sequential"
+    assert cfg.symmetry_break and cfg.ii_max == 40
+    assert cfg.total_timeout_s == 45.0
+
+
+# ---------------------------------------------------------------------------
+# the python -m repro CLI
+# ---------------------------------------------------------------------------
+
+
+def test_cli_map_json_digest(tmp_path, capsys):
+    out = tmp_path / "map.json"
+    rc = repro_main(["map", "bitcount", "--grid", "2x2", "--backend",
+                     "cdcl", "--json", "--out", str(out)])
+    assert rc == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["bench"] == "toolchain_map"
+    assert doc["status"] == "ok" and doc["kernel"] == "bitcount"
+    assert doc["metrics"]["cycles"] > 0
+    assert json.loads(out.read_text()) == doc
+
+
+def test_cli_map_failure_exit_code(capsys):
+    rc = repro_main(["map", "sqrt", "--grid", "2x2", "--backend", "cdcl",
+                     "--json"])
+    assert rc == 1
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["status"] == "unsat-capped" and doc["stage"] == "map"
+
+
+def test_cli_list_kernels(capsys):
+    assert repro_main(["list", "--origin", "traced"]) == 0
+    out = capsys.readouterr().out
+    assert "dotprod" in out and "traced" in out
+
+
+def test_cli_sweep_forwards_to_dse(tmp_path, capsys, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    out = tmp_path / "sweep.json"
+    rc = repro_main(["sweep", "--kernels", "bitcount", "--sizes", "2x2",
+                     "--backend", "cdcl", "--jobs", "1",
+                     "--out", str(out),
+                     "--cache-dir", str(tmp_path / "cache")])
+    assert rc == 0
+    doc = json.loads(out.read_text())
+    assert doc["bench"] == "dse" and len(doc["points"]) == 1
+    assert doc["points"][0]["status"] == "mapped"
+
+
+def test_cli_cosim_forwards_to_frontend(tmp_path, capsys, monkeypatch):
+    monkeypatch.chdir(tmp_path)
+    out = tmp_path / "cosim.json"
+    rc = repro_main(["cosim", "--map-only", "--kernels", "dotprod",
+                     "--out", str(out)])
+    assert rc == 0
+    doc = json.loads(out.read_text())
+    assert doc["kernels"][0]["status"] == "mapped"
