@@ -8,8 +8,11 @@ Three artifact shapes are understood:
   (cil, size, backend);
 * ``repro.dse`` sweep documents — points are joined on (kernel, size)
   and the whole Pareto section must match exactly;
+* ``benchmarks/arch_dse.py`` documents (``bench: "arch_dse"``) — points
+  are joined on (kernel, arch); Pareto + the acceptance block must match;
 * ``python -m repro map --json`` digests (``bench: "toolchain_map"``) —
-  the single-kernel toolchain smoke.
+  the single-kernel toolchain smoke (heterogeneous specs carry an
+  ``arch`` field that is gated too).
 
 ``--assert-identical`` additionally serializes the *correctness
 projection* of both sides (every machine-independent field, canonical
@@ -41,8 +44,12 @@ INC_TIME = ("cold_s", "incremental_s")
 DSE_HARD = ("status", "ii", "utilization", "latency_cycles", "energy_nj",
             "cegar_rounds")
 DSE_TIME = ("map_time_s",)
-TOOLMAP_HARD = ("bench", "kernel", "grid", "status", "stage", "ii", "mii",
-                "backend", "map_status", "cegar_rounds", "oracle",
+ARCHDSE_HARD = ("status", "ii", "mii", "utilization", "latency_cycles",
+                "energy_nj", "area", "validated", "assemblable",
+                "topology", "num_pes")
+ARCHDSE_TIME = ("map_time_s",)
+TOOLMAP_HARD = ("bench", "kernel", "grid", "arch", "status", "stage", "ii",
+                "mii", "backend", "map_status", "cegar_rounds", "oracle",
                 "utilization", "metrics", "error")
 TOOLMAP_TIME = ("wall_time_s",)
 
@@ -123,6 +130,32 @@ def check_dse(cur: Dict, base: Dict, gate: Gate) -> None:
                base.get("wall_time_s"))
 
 
+def check_arch_dse(cur: Dict, base: Dict, gate: Gate) -> None:
+    cur_pts = {(p["kernel"], p["arch"]): p for p in cur.get("points", [])}
+    base_pts = {(p["kernel"], p["arch"]): p for p in base.get("points", [])}
+    missing = sorted(str(k) for k in set(base_pts) - set(cur_pts))
+    if missing:
+        gate.errors.append(f"arch_dse: points missing: {missing}")
+    for key, b in base_pts.items():
+        c = cur_pts.get(key)
+        if c is None:
+            continue
+        where = "arch_dse" + str(key)
+        for f in ARCHDSE_HARD:
+            if f in b:
+                gate.hard(where, f, c.get(f), b.get(f))
+        for f in ARCHDSE_TIME:
+            gate.timed(where, f, c.get(f), b.get(f))
+    gate.hard("arch_dse", "pareto",
+              json.dumps(cur.get("pareto"), sort_keys=True),
+              json.dumps(base.get("pareto"), sort_keys=True))
+    gate.hard("arch_dse", "acceptance",
+              json.dumps(cur.get("acceptance"), sort_keys=True),
+              json.dumps(base.get("acceptance"), sort_keys=True))
+    gate.timed("arch_dse", "wall_time_s", cur.get("wall_time_s"),
+               base.get("wall_time_s"))
+
+
 def check_toolchain_map(cur: Dict, base: Dict, gate: Gate) -> None:
     where = f"toolchain_map({base.get('kernel')}@{base.get('grid')})"
     for f in TOOLMAP_HARD:
@@ -147,6 +180,15 @@ def correctness_projection(doc) -> bytes:
                  for p in doc.get("points", [])),
                 key=lambda p: (str(p["kernel"]), str(p["size"]))),
             "pareto": doc.get("pareto"),
+        }
+    elif isinstance(doc, dict) and doc.get("bench") == "arch_dse":
+        stable = {
+            "points": sorted(
+                ({k: p.get(k) for k in ("kernel", "arch") + ARCHDSE_HARD}
+                 for p in doc.get("points", [])),
+                key=lambda p: (str(p["kernel"]), str(p["arch"]))),
+            "pareto": doc.get("pareto"),
+            "acceptance": doc.get("acceptance"),
         }
     elif isinstance(doc, dict) and doc.get("bench") == "toolchain_map":
         stable = {k: doc.get(k) for k in TOOLMAP_HARD}
@@ -187,6 +229,8 @@ def main(argv=None) -> int:
                 check_times=not args.correctness_only)
     if isinstance(base, dict) and base.get("bench") == "dse":
         check_dse(cur, base, gate)
+    elif isinstance(base, dict) and base.get("bench") == "arch_dse":
+        check_arch_dse(cur, base, gate)
     elif isinstance(base, dict) and base.get("bench") == "toolchain_map":
         check_toolchain_map(cur, base, gate)
     elif isinstance(base, list):

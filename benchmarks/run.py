@@ -6,10 +6,11 @@
   solver_opts     — beyond-paper SAT encoding/symmetry ablations
   incremental_solver — incremental vs cold-rebuild mapping engine
   dse             — design-space sweep (kernels x CGRA sizes, repro.dse)
+  arch_dse        — widened architecture sweep (topology x heterogeneity
+                    x size, repro.archspec) + §7 pruning analysis
   frontend_cosim  — traced kernels: map + differential co-simulation
                     (skipped without the jax extra — execution needs the
                     PE-array kernels)
-  roofline_table  — §Roofline from the multi-pod dry-run sweep
 
 Prints ``name,us_per_call,derived`` CSV per the harness convention and
 writes JSON artifacts under results/.  A lane that raises is reported as
@@ -121,19 +122,26 @@ def main() -> int:
         rows.append((name, dt, f"cosim_ok={s['ok']}/{s['total']};"
                      f"seeds={doc['seeds']};grid={doc['grid']}"))
 
-    def lane_roofline():
-        from . import roofline_table
-        name, dt, recs = _run("roofline_table", roofline_table.main)
-        ok = sum(1 for r in recs if r["status"] == "ok")
-        rows.append((name, dt, f"cells_ok={ok}/{len(recs)}"))
+    def lane_arch_dse():
+        from . import arch_dse
+        # full lane writes beside the committed baseline, never over it
+        name, dt, doc = _run(
+            "arch_dse", lambda: arch_dse.main(out="results/arch_dse.json"))
+        s = doc["pareto"]["summary"]
+        acc = doc["acceptance"]
+        rows.append((name, dt,
+                     f"mapped={s['mapped_points']};retained="
+                     f"{s['mean_retained_fraction']};pruned="
+                     f"{s['mean_pruned_fraction']};"
+                     f"hetero_ok={acc['count']}/{acc['required']}"))
 
     lane("fig7_table4", lane_fig7)
     lane("table7_8", lane_table7_8)
     lane("solver_opts", lane_solver_opts)
     lane("incremental_solver", lane_incremental)
     lane("dse", lane_dse)
+    lane("arch_dse", lane_arch_dse)
     lane("frontend_cosim", lane_frontend)
-    lane("roofline_table", lane_roofline)
 
     print("\nname,us_per_call,derived")
     for name, dt, derived in rows:

@@ -1,6 +1,6 @@
 """repro: SAT-MapIt (SAT-based exact modulo scheduling for CGRAs) as a
-production JAX framework — solver core, CGRA runtime, LM substrate,
-multi-pod launch.
+production JAX framework — solver core, CGRA runtime, declarative
+architecture specs (:mod:`repro.archspec`), design-space exploration.
 
 The compilation-session API lives in :mod:`repro.toolchain`
 (``from repro.toolchain import Toolchain``); ``repro.Toolchain`` is a

@@ -13,12 +13,19 @@ come from a calibrated model over the assembled instruction grid:
   power.  Constants are calibrated to land in the paper Table 7 nJ range at
   100 MHz / 65 nm; we use them for *relative* comparisons (Pareto fronts),
   never as absolute silicon claims.
+* area (heterogeneous specs): each PE pays for what it instantiates —
+  ALU + routing always, a load-store unit / multiplier / register words
+  only where the capability table grants them.  ``arch_area`` is the DSE
+  area objective; passing ``grid=`` to :func:`runtime_metrics` scales the
+  static term by the same table, calibrated so the all-capable 4-register
+  PE reproduces the homogeneous constant exactly.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Dict, List
+from typing import Dict, List, Optional
 
+from .arch import PEGrid
 from .bitstream import AssembledCIL
 from .isa import LOAD_OPS, MUL_OPS, STORE_OPS
 
@@ -31,6 +38,33 @@ for _op in LOAD_OPS + STORE_OPS:
     OP_ENERGY[_op] = 6.0
 OP_ENERGY["NOP"] = 0.0
 STATIC_PJ_PER_PE_CYCLE = 1.3   # leakage + clock tree + config readout
+
+# relative area units per PE building block (65 nm-class ratios; the DSE
+# area objective and the capability-scaled static model, never absolute)
+PE_BASE_AREA = 1.0             # ALU, routing, config + flag logic
+LSU_AREA = 0.45                # load-store unit + shared-port wiring
+MUL_AREA = 0.65                # 32-bit multiplier
+REG_AREA_PER_WORD = 0.05       # register file, per word
+#: the reference all-capable 4-register PE: the calibration point where
+#: the capability-aware static model coincides with the homogeneous one
+FULL_PE_AREA = PE_BASE_AREA + LSU_AREA + MUL_AREA + 4 * REG_AREA_PER_WORD
+
+
+def pe_area(grid: PEGrid, pe: int) -> float:
+    """Relative area of one PE under the grid's capability table."""
+    caps = grid.caps
+    area = PE_BASE_AREA + grid.spec.num_regs * REG_AREA_PER_WORD
+    if caps is None or caps.mem_pes is None or pe in caps.mem_pes:
+        area += LSU_AREA
+    if caps is None or caps.mul_pes is None or pe in caps.mul_pes:
+        area += MUL_AREA
+    return area
+
+
+def arch_area(grid: PEGrid) -> float:
+    """Relative fabric area (sum of per-PE areas) — the DSE objective a
+    heterogeneity actually buys down."""
+    return round(sum(pe_area(grid, p) for p in range(grid.num_pes)), 6)
 
 
 @dataclass
@@ -75,11 +109,19 @@ def row_latency(row, num_cols: int) -> int:
 
 
 def runtime_metrics(asm: AssembledCIL, num_cols: int,
-                    utilization: float) -> RuntimeMetrics:
+                    utilization: float,
+                    grid: Optional[PEGrid] = None) -> RuntimeMetrics:
+    """``grid=None`` keeps the calibrated homogeneous static constant
+    (byte-identical committed baselines); passing a grid scales leakage
+    by its capability table (== the constant for all-capable 4-reg PEs)."""
     cycles = sum(row_latency(row, num_cols) for row in asm.rows)
     dynamic = sum(count * OP_ENERGY.get(op, _DEFAULT_OP_ENERGY)
                   for op, count in sorted(asm.op_counts().items()))
-    static = cycles * asm.num_pes * STATIC_PJ_PER_PE_CYCLE
+    if grid is None:
+        static = cycles * asm.num_pes * STATIC_PJ_PER_PE_CYCLE
+    else:
+        static = cycles * STATIC_PJ_PER_PE_CYCLE \
+            * arch_area(grid) / FULL_PE_AREA
     return RuntimeMetrics(cycles=cycles,
                           energy_nj=(dynamic + static) / 1000.0,
                           ii=asm.ii, utilization=utilization,

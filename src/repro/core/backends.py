@@ -118,6 +118,8 @@ class Z3Session(SolverSession):
         n_clauses = 0
         # C1: exactly one per node
         for lits in enc.node_lits.values():
+            if not lits:
+                continue  # unplaceable node: is_trivially_unsat short-circuits
             check_deadline()
             solver.add(z3.Or(*[bools[l] for l in lits]))
             n_clauses += 1
@@ -152,6 +154,19 @@ class Z3Session(SolverSession):
             check_deadline()
             solver.add(_to_z3(f, z3, bools, cache))
             n_clauses += 1
+        # C4: shared-memory-port arbitration (heterogeneous specs only)
+        for lits, limit in enc.port_amo_groups:
+            check_deadline()
+            if limit == 1 and amo == "pairwise":
+                for i in range(len(lits)):
+                    for j in range(i + 1, len(lits)):
+                        solver.add(z3.Or(z3.Not(bools[lits[i]]),
+                                         z3.Not(bools[lits[j]])))
+                        n_clauses += 1
+            else:
+                # at-most-k has no pairwise analogue worth emitting
+                solver.add(z3.AtMost(*[bools[l] for l in lits], limit))
+                n_clauses += 1
         # symmetry breaking
         for lit in enc.forced_false:
             solver.add(z3.Not(bools[lit]))
@@ -216,6 +231,8 @@ def encoding_to_cnf(enc: KMSEncoding, amo: str = "pairwise",
     cnf = CNF()
     cnf.ensure_var(enc.stats.num_vars)
     for lits in enc.node_lits.values():
+        if not lits:
+            continue  # unplaceable node: the trivially-unsat pair below fires
         check_deadline()
         cnf.exactly_one(lits, encoding="sequential" if amo == "sequential"
                         else "pairwise")
@@ -224,6 +241,15 @@ def encoding_to_cnf(enc: KMSEncoding, amo: str = "pairwise",
             continue
         check_deadline()
         if amo == "sequential":
+            cnf.at_most_one_sequential(lits)
+        else:
+            cnf.at_most_one_pairwise(lits)
+    # C4: shared-memory-port arbitration (heterogeneous specs only)
+    for lits, limit in enc.port_amo_groups:
+        check_deadline()
+        if limit > 1:
+            cnf.at_most_k_sequential(lits, limit)
+        elif amo == "sequential":
             cnf.at_most_one_sequential(lits)
         else:
             cnf.at_most_one_pairwise(lits)

@@ -268,6 +268,11 @@ def mapping_cache_key(dfg: DFG, grid: PEGrid,
     omitted from the payload so pre-existing cache entries stay valid.
     DFG/arch *names* are deliberately excluded: the key addresses
     content, not labels.
+
+    Heterogeneous architectures (``repro.archspec``) contribute an
+    ``arch_hash`` entry covering topology + capability/port tables; the
+    legacy homogeneous grids have ``arch_fingerprint() is None`` and omit
+    it, so their keys stay byte-identical to every pre-archspec release.
     """
     cfg = config or MapperConfig()
     cfg_key = {
@@ -293,6 +298,9 @@ def mapping_cache_key(dfg: DFG, grid: PEGrid,
         "config": cfg_key,
         "extra": extra,
     }
+    fingerprint = grid.arch_fingerprint()
+    if fingerprint is not None:
+        payload["arch_hash"] = fingerprint
     if ii_start:
         payload["ii_start"] = ii_start
     blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))

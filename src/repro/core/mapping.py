@@ -10,7 +10,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Tuple
 
-from ..cgra.arch import PEGrid
+from ..cgra.arch import MEM_OPS, PEGrid
+from ..cgra.isa import MUL_OPS
 from .dfg import DFG, Edge
 from .schedule import KMS, Slot
 
@@ -138,6 +139,35 @@ def validate_mapping(mapping: Mapping, kms: Optional[KMS] = None,
             errors.append(
                 f"PE {pl.pe} row {pl.slot.c}: nodes {seen[key]} and {n}")
         seen[key] = n
+
+    # C4: capability classes + shared-memory-port arbitration (archspec).
+    # Re-derived from the grid's capability table — never from the
+    # encoder's literal space — so the encoder cannot self-certify.
+    caps = grid.caps
+    if caps is not None:
+        for n in sorted(mapping.placements):
+            pl = mapping.placements[n]
+            op = dfg.nodes[n].op
+            if (op in MEM_OPS and caps.mem_pes is not None
+                    and pl.pe not in caps.mem_pes):
+                errors.append(
+                    f"node {n} ({op}) on PE {pl.pe} without a load-store "
+                    f"unit (mem-capable: {sorted(caps.mem_pes)})")
+            if (op in MUL_OPS and caps.mul_pes is not None
+                    and pl.pe not in caps.mul_pes):
+                errors.append(
+                    f"node {n} ({op}) on PE {pl.pe} without a multiplier "
+                    f"(mul-capable: {sorted(caps.mul_pes)})")
+        for label, pes, limit in caps.port_groups:
+            for c in range(ii):
+                users = sorted(
+                    n for n, pl in mapping.placements.items()
+                    if pl.pe in pes and pl.slot.c == c
+                    and dfg.nodes[n].op in MEM_OPS)
+                if len(users) > limit:
+                    errors.append(
+                        f"port group {label}: {len(users)} memory ops in "
+                        f"row {c} exceed {limit} port(s): nodes {users}")
 
     # C3: per-edge timing + routing legality
     busy_rows: Dict[int, set] = {}

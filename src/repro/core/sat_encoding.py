@@ -26,6 +26,19 @@ with iteration label ``it``.  Three clause families:
     the producer PE at any row strictly between** producer and consumer
     (ζ2, Eq. 16-17: the output register must survive).
 
+Heterogeneous fabrics (``repro.archspec``) add two resource families on
+top of the paper's three:
+
+* **op-compatibility** — a node whose op needs a load-store unit or a
+  multiplier only gets literals on PEs that have one
+  (``PEGrid.placeable_pes``); a node with no compatible PE makes the
+  instance trivially UNSAT (``stats.unplaceable_nodes``).
+* **C4 (port arbitration)** — for every shared-memory-port group and
+  every kernel row, at most ``limit`` of the group's memory-op literals
+  may be true (``port_amo_groups``; backends pick the cardinality
+  encoding).  Homogeneous grids produce no groups, so their CNF is
+  byte-identical to the historical encoding.
+
 The encoding is built **once per (DFG, II)** and reused across CEGAR
 rounds: :meth:`KMSEncoding.add_blocked_combination` converts a lazy
 counterexample into a single blocking clause without re-deriving the
@@ -41,7 +54,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Dict, List, Optional, Sequence, Tuple
 
-from ..cgra.arch import PEGrid
+from ..cgra.arch import MEM_OPS, PEGrid
 from ..sat.cnf import And, Formula, Not, Or, Var
 from .dfg import DFG, Edge
 from .schedule import KMS, Slot
@@ -75,6 +88,8 @@ class EncodingStats:
     num_edge_formulas: int = 0
     num_candidate_pairs: int = 0
     infeasible_edges: List[Tuple[int, int, int]] = field(default_factory=list)
+    num_port_groups: int = 0
+    unplaceable_nodes: List[int] = field(default_factory=list)
 
 
 class KMSEncoding:
@@ -114,6 +129,8 @@ class KMSEncoding:
                                   Tuple[Tuple[int, Var], ...]] = {}
 
         self._build_literals()
+        self.port_amo_groups: List[Tuple[List[int], int]] = []
+        self._build_port_constraints()
         self.edge_formulas: List[Tuple[Edge, Formula]] = []
         self._build_edges()
         self.forced_false: List[int] = []
@@ -137,8 +154,11 @@ class KMSEncoding:
     def _build_literals(self) -> None:
         for n in self.dfg.node_ids():
             lits: List[int] = []
+            # op-compatibility: only capability-carrying PEs get literals
+            # (every PE on a homogeneous grid — identical var numbering)
+            pes = self.grid.placeable_pes(self.dfg.nodes[n].op)
             for slot in self.kms.slots[n]:
-                for p in range(self.grid.num_pes):
+                for p in pes:
                     idx = len(self.meta_of)
                     self.meta_of.append(LitMeta(node=n, pe=p, slot=slot))
                     self._var_nodes.append(Var(idx))
@@ -146,6 +166,30 @@ class KMSEncoding:
                     lits.append(idx)
                     self.pe_row_lits.setdefault((p, slot.c), []).append(idx)
             self.node_lits[n] = lits
+            if not lits:
+                self.stats.unplaceable_nodes.append(n)
+
+    # -- C4: shared-memory-port arbitration (heterogeneous specs) ---------------
+
+    def _build_port_constraints(self) -> None:
+        """At most ``limit`` memory ops per kernel row per port group."""
+        caps = self.grid.caps
+        if caps is None or not caps.port_groups:
+            return
+        mem_lits: Dict[Tuple[int, int], List[int]] = {}
+        for idx, meta in enumerate(self.meta_of):
+            if meta is None:
+                continue
+            if self.dfg.nodes[meta.node].op in MEM_OPS:
+                mem_lits.setdefault((meta.pe, meta.slot.c), []).append(idx)
+        for _label, pes, limit in caps.port_groups:
+            for c in range(self.kms.ii):
+                lits: List[int] = []
+                for p in sorted(pes):
+                    lits.extend(mem_lits.get((p, c), ()))
+                if len(lits) > limit:
+                    self.port_amo_groups.append((lits, limit))
+        self.stats.num_port_groups = len(self.port_amo_groups)
 
     # -- C3 ------------------------------------------------------------------------
 
@@ -202,8 +246,10 @@ class KMSEncoding:
             for ss in self.kms.slots[edge.src]:
                 for sd in self.kms.slots[edge.dst]:
                     for p in range(self.grid.num_pes):
-                        vi = var_of[(edge.src, p, ss)]
-                        wj = var_of[(edge.dst, p, sd)]
+                        vi = var_of.get((edge.src, p, ss))
+                        wj = var_of.get((edge.dst, p, sd))
+                        if vi is None or wj is None:
+                            continue  # PE lacks a capability one end needs
                         disjuncts.append(And((var_nodes[vi], var_nodes[wj])))
             return Or(disjuncts)
         pairs = self.candidate_pairs(edge)
@@ -217,8 +263,10 @@ class KMSEncoding:
             for (ss, sd, gap) in pairs:
                 eff = gap if gap != 0 else ii
                 for p in range(self.grid.num_pes):
-                    vi = var_of[(edge.src, p, ss)]
-                    wj = var_of[(edge.dst, p, sd)]
+                    vi = var_of.get((edge.src, p, ss))
+                    wj = var_of.get((edge.dst, p, sd))
+                    if vi is None or wj is None:
+                        continue  # PE lacks a capability one end needs
                     blockers = self._blockers(p, ss.c, eff, (vi, wj))
                     if blockers:
                         disjuncts.append(
@@ -232,11 +280,15 @@ class KMSEncoding:
             if edge.src == edge.dst:
                 # value loops back into the same PE through the register file
                 for p in range(self.grid.num_pes):
-                    disjuncts.append(var_nodes[var_of[(edge.src, p, ss)]])
+                    vi = var_of.get((edge.src, p, ss))
+                    if vi is not None:
+                        disjuncts.append(var_nodes[vi])
                 continue
             for (p_s, p_d) in reachable:
-                vi = var_of[(edge.src, p_s, ss)]
-                wj = var_of[(edge.dst, p_d, sd)]
+                vi = var_of.get((edge.src, p_s, ss))
+                wj = var_of.get((edge.dst, p_d, sd))
+                if vi is None or wj is None:
+                    continue  # PE lacks a capability one end needs
                 if gap == 1:
                     # γ (Eq. 11): one-cycle output-register hand-off
                     disjuncts.append(And((var_nodes[vi], var_nodes[wj])))
@@ -259,6 +311,12 @@ class KMSEncoding:
         for edge in self.dfg.edges:
             self._check_deadline()
             f = self._edge_formula(edge)
+            if isinstance(f, Or) and not f.children:
+                # capability restrictions killed every placement pair
+                # (e.g. no two mem-capable PEs are adjacent): trivially UNSAT
+                self.stats.infeasible_edges.append(
+                    (edge.src, edge.dst, edge.distance))
+                continue
             if f is not None:
                 self.edge_formulas.append((edge, f))
 
@@ -321,4 +379,5 @@ class KMSEncoding:
 
     @property
     def is_trivially_unsat(self) -> bool:
-        return bool(self.stats.infeasible_edges)
+        return bool(self.stats.infeasible_edges
+                    or self.stats.unplaceable_nodes)

@@ -1,9 +1,13 @@
-"""Design-space exploration (paper §6-7): parallel kernel × CGRA-size
-sweeps, a content-addressed mapping cache, and Pareto pruning analysis."""
+"""Design-space exploration (paper §6-7): parallel kernel × architecture
+sweeps, a content-addressed mapping cache, and Pareto pruning analysis.
+The classic axis is the homogeneous size ladder; ``arch_space`` /
+``build_arch_space`` open the widened topology × heterogeneity × size
+walk over ``repro.archspec`` specs."""
 from .cache import MappingCache
 from .pareto import dominates, kernel_pareto, pareto_analysis, pareto_front
 from .space import (DEFAULT_KERNELS, DEFAULT_SIZES, SMOKE_KERNELS,
-                    SMOKE_SIZES, DesignPoint, build_space, kernel_program,
+                    SMOKE_SIZES, ArchPoint, DesignPoint, arch_space,
+                    build_arch_space, build_space, kernel_program,
                     parse_sizes)
 from .sweep import SweepConfig, run_sweep
 
@@ -11,6 +15,7 @@ __all__ = [
     "MappingCache",
     "dominates", "kernel_pareto", "pareto_analysis", "pareto_front",
     "DEFAULT_KERNELS", "DEFAULT_SIZES", "SMOKE_KERNELS", "SMOKE_SIZES",
-    "DesignPoint", "build_space", "kernel_program", "parse_sizes",
+    "ArchPoint", "DesignPoint", "arch_space", "build_arch_space",
+    "build_space", "kernel_program", "parse_sizes",
     "SweepConfig", "run_sweep",
 ]

@@ -33,19 +33,27 @@ def pareto_front(points: Sequence[Sequence[float]]) -> List[int]:
                        for j, q in enumerate(points) if j != i)]
 
 
-def kernel_pareto(points: List[Dict]) -> Dict:
+def kernel_pareto(points: List[Dict], label_key: str = "size",
+                  extra_objectives: Sequence[str] = ()) -> Dict:
     """Fronts + pruning metric for one kernel's mapped design points.
 
-    Each record needs ``size``, ``ii``, ``utilization``,
-    ``latency_cycles``, ``energy_nj``.  Returns size labels (sorted, so
-    repeated sweeps serialize byte-identically) rather than indices.
+    Each record needs ``ii``, ``utilization``, ``latency_cycles``,
+    ``energy_nj`` and the ``label_key`` field (``"size"`` for the classic
+    geometry ladder, ``"arch"`` for the widened architecture space).
+    ``extra_objectives`` appends fields — e.g. ``("area",)`` — to *both*
+    fronts: area is known at spec time, so the compiler-metric architect
+    legitimately prunes with it.  Returns labels (sorted, so repeated
+    sweeps serialize byte-identically) rather than indices.
     """
-    runtime = pareto_front([(p["ii"], p["latency_cycles"], p["energy_nj"])
-                            for p in points])
-    compiler = pareto_front([(p["ii"], round(1.0 - p["utilization"], 9))
-                             for p in points])
-    runtime_set = {points[i]["size"] for i in runtime}
-    compiler_set = {points[i]["size"] for i in compiler}
+    extras = [tuple(p[k] for k in extra_objectives) for p in points]
+    runtime = pareto_front(
+        [(p["ii"], p["latency_cycles"], p["energy_nj"]) + e
+         for p, e in zip(points, extras)])
+    compiler = pareto_front(
+        [(p["ii"], round(1.0 - p["utilization"], 9)) + e
+         for p, e in zip(points, extras)])
+    runtime_set = {points[i][label_key] for i in runtime}
+    compiler_set = {points[i][label_key] for i in compiler}
     retained = (len(runtime_set & compiler_set) / len(runtime_set)
                 if runtime_set else 1.0)
     pruned = 1.0 - len(compiler_set) / len(points) if points else 0.0
@@ -58,13 +66,15 @@ def kernel_pareto(points: List[Dict]) -> Dict:
     }
 
 
-def pareto_analysis(records: List[Dict]) -> Dict:
+def pareto_analysis(records: List[Dict], label_key: str = "size",
+                    extra_objectives: Sequence[str] = ()) -> Dict:
     """Per-kernel fronts + cross-kernel aggregates over mapped records."""
     per_kernel: Dict[str, List[Dict]] = {}
     for r in records:
         if r.get("status") == "mapped":
             per_kernel.setdefault(r["kernel"], []).append(r)
-    out = {k: kernel_pareto(v) for k, v in sorted(per_kernel.items())}
+    out = {k: kernel_pareto(v, label_key, extra_objectives)
+           for k, v in sorted(per_kernel.items())}
     retained = [v["retained_fraction"] for v in out.values()]
     pruned = [v["pruned_fraction"] for v in out.values()]
     summary = {

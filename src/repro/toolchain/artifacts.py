@@ -90,6 +90,10 @@ class CompileResult:
     rows: int
     cols: int
     status: str
+    #: non-default architecture label (archspec compact string / preset
+    #: name); ``None`` on the homogeneous torus so legacy digests are
+    #: byte-identical
+    arch: Optional[str] = None
     stage: Optional[str] = None
     program: Optional[Program] = None
     map_result: Optional[MapResult] = None
@@ -128,7 +132,7 @@ class CompileResult:
     def to_dict(self) -> Dict:
         map_result = self.map_result.to_dict() if self.map_result else None
         metrics = self.metrics.to_dict() if self.metrics else None
-        return {
+        out = {
             "kernel": self.kernel,
             "rows": self.rows,
             "cols": self.cols,
@@ -140,6 +144,9 @@ class CompileResult:
             "map_result": map_result,
             "metrics": metrics,
         }
+        if self.arch is not None:
+            out["arch"] = self.arch
+        return out
 
     @classmethod
     def from_dict(
@@ -172,6 +179,7 @@ class CompileResult:
             rows=d["rows"],
             cols=d["cols"],
             status=d["status"],
+            arch=d.get("arch"),
             stage=d.get("stage"),
             program=program,
             map_result=map_result,
@@ -195,6 +203,8 @@ class CompileResult:
             "mii": self.mii,
             "stage_times_s": times,
         }
+        if self.arch is not None:
+            out["arch"] = self.arch
         if self.map_result is not None:
             out["backend"] = self.map_result.backend
             out["map_status"] = self.map_result.status

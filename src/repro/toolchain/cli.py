@@ -3,9 +3,12 @@
 Subcommands::
 
     repro map KERNEL --grid 4x4 [--json] [--out F]   one kernel -> metrics
+    repro map KERNEL --arch bordermem-4x4            ... on a hetero spec
     repro cosim [...]    differential co-simulation (repro.frontend args)
     repro sweep [...]    design-space sweep          (repro.dse args)
     repro list [--origin handwritten|traced]         registered kernels
+    repro arch list                                  presets + spec grammar
+    repro arch show SPEC                             one spec, fully expanded
 
 ``map`` compiles one registry kernel end-to-end through a
 :class:`~repro.toolchain.session.Toolchain` session and prints either a
@@ -37,7 +40,8 @@ def _cmd_map(args) -> int:
         ii_max=args.ii_max,
     )
     oracle = None if args.no_oracle else "assembler"
-    tc = Toolchain(args.grid, cfg, cache=args.cache_dir, oracle=oracle)
+    tc = Toolchain(args.arch or args.grid, cfg, cache=args.cache_dir,
+                   oracle=oracle)
     t0 = time.monotonic()
     cr = tc.compile(args.kernel)
     doc = cr.summary()
@@ -56,11 +60,12 @@ def _cmd_map(args) -> int:
 
 
 def _print_human(cr) -> None:
+    where = cr.arch or cr.size
     if cr.ok:
         m = cr.metrics
         hit = " (cache hit)" if cr.cache_hit else ""
         print(
-            f"{cr.kernel} @ {cr.size}: II={cr.ii} (mII={cr.mii}) "
+            f"{cr.kernel} @ {where}: II={cr.ii} (mII={cr.mii}) "
             f"backend={cr.map_result.backend} "
             f"cegar={cr.map_result.cegar_rounds}"
         )
@@ -71,7 +76,57 @@ def _print_human(cr) -> None:
         )
     else:
         why = f" — {cr.error}" if cr.error else ""
-        print(f"{cr.kernel} @ {cr.size}: {cr.status} at stage {cr.stage!r}{why}")
+        print(f"{cr.kernel} @ {where}: {cr.status} at stage {cr.stage!r}{why}")
+
+
+def _cmd_arch_list(args) -> int:
+    from ..archspec import PRESETS
+
+    print("presets:")
+    for name in sorted(PRESETS):
+        spec = PRESETS[name]
+        print(f"  {name:16s} {spec.to_compact()}")
+    print()
+    print("spec grammar: TOPOLOGY-RxC[:mem=SEL,mul=SEL,regs=N,ports=K/SCOPE]")
+    print("  topologies: torus mesh diagonal one-hop")
+    print("  selectors:  all none colK rowK border peA.B.C (+-unions)")
+    print("  scopes:     col row global")
+    print("  example:    mesh-4x4:mem=col0,regs=8,ports=1/row")
+    return 0
+
+
+def _cmd_arch_show(args) -> int:
+    from ..archspec import parse_arch
+
+    spec = parse_arch(args.spec)
+    grid = spec.grid()
+    print(f"{spec.label()}  ({spec.to_compact()})")
+    print(f"  geometry:   {spec.rows}x{spec.cols} ({spec.num_pes} PEs), "
+          f"{spec.num_regs} regs/PE")
+    print(f"  topology:   {spec.topology} "
+          f"(vertex-transitive: {grid.is_vertex_transitive()}, "
+          f"assemblable: {spec.assemblable})")
+    mem, mul = spec.mem_pes(), spec.mul_pes()
+    print(f"  mem PEs:    {'all' if mem is None else sorted(mem)}")
+    print(f"  mul PEs:    {'all' if mul is None else sorted(mul)}")
+    if spec.ports:
+        for label, pes, limit in spec.port_groups():
+            print(f"  port {label}: {limit} port(s) over PEs {sorted(pes)}")
+    else:
+        print("  ports:      unconstrained")
+    print(f"  arch hash:  {spec.arch_hash()}")
+    # capability map: M = load-store unit, X = multiplier, . = ALU-only
+    print("  capability map (M=mem X=mul *=both .=alu):")
+    for r in range(spec.rows):
+        cells = []
+        for c in range(spec.cols):
+            p = r * spec.cols + c
+            has_mem = mem is None or p in mem
+            has_mul = mul is None or p in mul
+            cells.append("*" if has_mem and has_mul
+                         else "M" if has_mem else "X" if has_mul else ".")
+        print("    " + " ".join(cells))
+    return 0
 
 
 def _cmd_list(args) -> int:
@@ -108,6 +163,12 @@ def main(argv: Optional[List[str]] = None) -> int:
     mp = sub.add_parser("map", help="compile one kernel to metrics")
     mp.add_argument("kernel", help="registered kernel name (see: repro list)")
     mp.add_argument("--grid", default="4x4", help="CGRA size (default 4x4)")
+    mp.add_argument(
+        "--arch",
+        default=None,
+        help="architecture spec or preset (overrides --grid; "
+             "see: repro arch list)",
+    )
     mp.add_argument("--backend", default="auto", choices=["auto", "cdcl", "z3"])
     mp.add_argument(
         "--timeout",
@@ -148,6 +209,14 @@ def main(argv: Optional[List[str]] = None) -> int:
     lp = sub.add_parser("list", help="list registered kernels")
     lp.add_argument("--origin", default=None, choices=["handwritten", "traced"])
     lp.set_defaults(fn=_cmd_list)
+
+    arp = sub.add_parser("arch", help="architecture presets and specs")
+    arsub = arp.add_subparsers(dest="arch_cmd", required=True)
+    al = arsub.add_parser("list", help="presets + the spec grammar")
+    al.set_defaults(fn=_cmd_arch_list)
+    ash = arsub.add_parser("show", help="expand one spec/preset")
+    ash.add_argument("spec", help="spec string or preset name")
+    ash.set_defaults(fn=_cmd_arch_show)
 
     args = ap.parse_args(argv)
     return args.fn(args)

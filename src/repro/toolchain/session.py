@@ -32,6 +32,7 @@ import time
 from concurrent.futures import ProcessPoolExecutor
 from typing import Dict, List, Optional, Sequence, Tuple, Union
 
+from ..archspec import ArchSpec, parse_arch
 from ..cgra.arch import PEGrid, make_grid
 from ..cgra.bitstream import AssembledCIL, assemble
 from ..cgra.energy import RuntimeMetrics, runtime_metrics
@@ -46,20 +47,57 @@ from ..core.mapping import Mapping
 from .artifacts import CompileResult, Program, StageError, format_error
 from .oracles import assembler_oracle, resolve_oracle
 
-ArchLike = Union[PEGrid, str, Tuple[int, int]]
+ArchLike = Union[PEGrid, ArchSpec, str, Tuple[int, int]]
 
-PointKey = Tuple[str, int, int]  # (kernel, rows, cols)
+PointKey = Tuple[str, int]  # (kernel, grid index)
 
 
 def resolve_arch(arch: ArchLike) -> PEGrid:
-    """``PEGrid`` | ``"4x4"`` | ``(4, 4)`` -> :class:`PEGrid`."""
+    """``PEGrid`` | ``ArchSpec`` | spec/preset string | ``(4, 4)`` ->
+    :class:`PEGrid`.
+
+    Strings go through :func:`repro.archspec.parse_arch`, so ``"4x4"``
+    still means the homogeneous torus while ``"mesh-4x4:mem=col0"`` or a
+    preset name like ``"bordermem-4x4"`` yields a capability-annotated
+    grid."""
     if isinstance(arch, PEGrid):
         return arch
+    if isinstance(arch, ArchSpec):
+        return arch.grid()
     if isinstance(arch, str):
-        r, _, c = arch.lower().partition("x")
-        return make_grid(int(r), int(c))
+        return parse_arch(arch).grid()
     rows, cols = arch
     return make_grid(int(rows), int(cols))
+
+
+def arch_label(arch: ArchLike, grid: PEGrid) -> Optional[str]:
+    """Display label for a non-default architecture, else ``None``.
+
+    ``None`` keeps the homogeneous-torus digests (and their committed CI
+    baselines) byte-identical; anything spec'd beyond ``RxC`` torus gets
+    its canonical compact label into CLI/bench artifacts."""
+    spec = None
+    if isinstance(arch, ArchSpec):
+        spec = arch
+    elif isinstance(arch, str):
+        spec = parse_arch(arch)
+    if spec is not None:
+        if spec.to_compact() != f"torus-{spec.rows}x{spec.cols}":
+            return spec.label()
+        return None
+    # raw PEGrid: the capability selectors are not recoverable, so label
+    # with name > topology-RxC, plus the content fingerprint when a
+    # capability table makes two same-shape fabrics distinct
+    fingerprint = grid.arch_fingerprint()
+    if fingerprint is None and grid.spec.torus:
+        return None
+    if grid.spec.name:
+        return grid.spec.name
+    shape = (f"{grid.spec.resolved_topology()}-"
+             f"{grid.spec.rows}x{grid.spec.cols}")
+    if grid.caps is not None:
+        return f"{shape}#{fingerprint[:8]}"
+    return shape
 
 
 class Toolchain:
@@ -81,6 +119,7 @@ class Toolchain:
         oracle="assembler",
     ):
         self.grid = resolve_arch(arch)
+        self.arch = arch_label(arch, self.grid)
         self.config = config or MapperConfig()
         if isinstance(cache, str):
             from ..dse.cache import MappingCache
@@ -160,6 +199,11 @@ class Toolchain:
     def _oracle_check(self, prog: Program):
         if self._oracle_factory is None or prog.builder is None:
             return None
+        if (self._oracle_factory is assembler_oracle
+                and not self.grid.assemblable):
+            # diagonal / one-hop interconnects cannot be assembled, so the
+            # codegen oracle has nothing to say (map-only architectures)
+            return None
         return self._oracle_factory(prog.builder)
 
     def _cache_key(self, prog: Program, cfg: MapperConfig, oracled: bool) -> str:
@@ -209,14 +253,20 @@ class Toolchain:
         asm: Optional[AssembledCIL] = None,
     ) -> RuntimeMetrics:
         """Calibrated latency/energy model over the assembled grid (no
-        JAX).  Re-assembles unless the stage-3 artifact is passed in."""
+        JAX).  Re-assembles unless the stage-3 artifact is passed in.
+        Capability-annotated architectures get the capability-aware
+        static model; plain grids keep the homogeneous constant (and so
+        their committed baselines)."""
         if asm is None:
             asm = self.assemble(source, mapping)
+        arch_grid = (self.grid if self.grid.caps is not None
+                     or self.grid.spec.num_regs != 4 else None)
         try:
             return runtime_metrics(
                 asm,
                 num_cols=self.grid.spec.cols,
                 utilization=mapping.utilization,
+                grid=arch_grid,
             )
         except Exception as e:
             raise StageError("metrics", format_error(e), cause=e) from e
@@ -275,6 +325,7 @@ class Toolchain:
                 rows=rows,
                 cols=cols,
                 status="error",
+                arch=self.arch,
                 stage=e.stage,
                 error=e.error_text(),
                 timings={"source": time.monotonic() - t0},
@@ -285,6 +336,7 @@ class Toolchain:
             rows=rows,
             cols=cols,
             status="error",
+            arch=self.arch,
             program=prog,
             timings=timings,
         )
@@ -341,33 +393,32 @@ class Toolchain:
         """Compile a kernels x grids cross product (kernel-major order).
 
         Kernels must be registry names (the tasks cross a process-pool
-        pickle boundary).  Cache hits are resolved in the parent and skip
-        solving entirely; misses fan out to a ``ProcessPoolExecutor``
-        (``os.cpu_count()``-bounded; ``jobs=1`` runs inline).  Solved
-        points are written back to the cache by the parent.  Post-map
-        stages always run in the parent — they are cheap and keep worker
-        payloads to plain dicts.
+        pickle boundary).  ``grids`` accepts any :data:`ArchLike` —
+        geometry tuples, archspec strings/presets, prebuilt grids — and
+        same-geometry entries with different capability tables are
+        distinct design points.  Cache hits are resolved in the parent
+        and skip solving entirely; misses fan out to a
+        ``ProcessPoolExecutor`` (``os.cpu_count()``-bounded; ``jobs=1``
+        runs inline).  Solved points are written back to the cache by the
+        parent.  Post-map stages always run in the parent — they are
+        cheap and keep worker payloads to plain dicts.
         """
         cfg = config or self.config
         if grids is None:
             grids = [self.grid]
         grid_list = [resolve_arch(g) for g in grids]
-        sessions = {}
-        for g in grid_list:
-            sessions[(g.spec.rows, g.spec.cols)] = self._sibling(g)
+        sessions = [self._sibling(g, src) for g, src in zip(grid_list, grids)]
         programs = {k: self.program(k) for k in kernels}
-        points: List[PointKey] = []
-        for k in kernels:
-            for g in grid_list:
-                points.append((k, g.spec.rows, g.spec.cols))
+        points: List[PointKey] = [(k, gi) for k in kernels
+                                  for gi in range(len(grid_list))]
 
         # resolve cache hits up front; only misses go to the pool
         done: Dict[PointKey, CompileResult] = {}
         pending: List[PointKey] = []
         keys: Dict[PointKey, str] = {}
         for pt in points:
-            kernel, rows, cols = pt
-            tc = sessions[(rows, cols)]
+            kernel, gi = pt
+            tc = sessions[gi]
             prog = programs[kernel]
             if self.cache is None:
                 pending.append(pt)
@@ -381,9 +432,10 @@ class Toolchain:
             res = MapResult.from_dict(prog.dfg, tc.grid, stored)
             cr = CompileResult(
                 kernel=kernel,
-                rows=rows,
-                cols=cols,
+                rows=tc.grid.spec.rows,
+                cols=tc.grid.spec.cols,
                 status="error",
+                arch=tc.arch,
                 program=prog,
                 map_result=res,
                 cache_hit=True,
@@ -405,7 +457,8 @@ class Toolchain:
                 # custom oracle: ship (tag, factory) to the workers; the
                 # factory must be picklable (module-level) for jobs > 1
                 oracle = (self.oracle_tag, self._oracle_factory)
-            tasks = [(k, r, c, cfg_dict, oracle) for k, r, c in pending]
+            tasks = [(k, grid_list[gi], cfg_dict, oracle)
+                     for k, gi in pending]
             n = jobs if jobs is not None else (os.cpu_count() or 1)
             n = max(1, min(n, len(tasks)))
             if n == 1:
@@ -414,14 +467,15 @@ class Toolchain:
                 with ProcessPoolExecutor(max_workers=n) as pool:
                     outs = list(pool.map(_map_point, tasks))
             for pt, out in zip(pending, outs):
-                kernel, rows, cols = pt
-                tc = sessions[(rows, cols)]
+                kernel, gi = pt
+                tc = sessions[gi]
                 prog = programs[kernel]
                 cr = CompileResult(
                     kernel=kernel,
-                    rows=rows,
-                    cols=cols,
+                    rows=tc.grid.spec.rows,
+                    cols=tc.grid.spec.cols,
                     status="error",
+                    arch=tc.arch,
                     program=prog,
                     timings={"map": out["map_time_s"]},
                 )
@@ -440,27 +494,32 @@ class Toolchain:
                     done[pt] = tc._finish(cr)
         return [done[pt] for pt in points]
 
-    def _sibling(self, grid: PEGrid) -> "Toolchain":
-        """Same session settings over a different grid (shared cache)."""
-        mine = (self.grid.spec.rows, self.grid.spec.cols)
-        if (grid.spec.rows, grid.spec.cols) == mine:
+    def _sibling(self, grid: PEGrid, source: ArchLike = None) -> "Toolchain":
+        """Same session settings over a different grid (shared cache).
+        ``source`` is the original :data:`ArchLike` (for the arch label —
+        a spec string carries the name the resolved grid may not)."""
+        if grid is self.grid:
             return self
         if self._oracle_factory is None:
             oracle = None
         else:
             oracle = (self.oracle_tag, self._oracle_factory)
-        return Toolchain(grid, self.config, cache=self.cache, oracle=oracle)
+        tc = Toolchain(grid, self.config, cache=self.cache, oracle=oracle)
+        if source is not None and not isinstance(source, PEGrid):
+            tc.arch = arch_label(source, grid)
+        return tc
 
 
 def _map_point(task) -> Dict:
     """Pool worker: one (kernel, grid) SAT mapping, oracle included.
 
-    Module-level (picklable) and self-contained: rebuilds the program,
-    grid and MapperConfig from plain values, returns plain dicts.  The
-    worker never touches the on-disk cache — the parent owns it.
+    Module-level (picklable) and self-contained: rebuilds the program
+    and MapperConfig from plain values (the grid — spec + capability
+    table — pickles directly), returns plain dicts.  The worker never
+    touches the on-disk cache — the parent owns it.
     """
-    kernel, rows, cols, cfg_dict, oracle = task
-    tc = Toolchain((rows, cols), MapperConfig(**cfg_dict), oracle=oracle)
+    kernel, grid, cfg_dict, oracle = task
+    tc = Toolchain(grid, MapperConfig(**cfg_dict), oracle=oracle)
     prog = tc.program(kernel)
     t0 = time.monotonic()
     try:
