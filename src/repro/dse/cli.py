@@ -6,6 +6,12 @@ all cache hits and must reproduce the first pass's Pareto sections
 byte-for-byte (``repeat_check`` in the emitted JSON records both).  The
 default artifact is ``results/BENCH_dse.json`` plus a markdown Pareto
 table next to it.
+
+Full sweeps journal every completed point next to the output file
+(``.sweep_journal.jsonl``); a killed sweep picks up where it left off
+with ``--resume``.  ``--chaos '{"seed":1,"rate":0.2}'`` arms the
+deterministic fault-injection harness (:mod:`repro.toolchain.chaos`)
+for the whole run — the nightly chaos CI lane drives exactly this path.
 """
 from __future__ import annotations
 
@@ -15,6 +21,7 @@ import os
 import sys
 from typing import List, Optional
 
+from ..toolchain import chaos
 from .report import markdown_report
 from .space import (DEFAULT_KERNELS, DEFAULT_SIZES, SMOKE_KERNELS,
                     SMOKE_SIZES, parse_sizes)
@@ -101,25 +108,53 @@ def main(argv: Optional[List[str]] = None) -> int:
                          f"--smoke: {SMOKE_OUT})")
     ap.add_argument("--cache-dir", default="results/dse_cache")
     ap.add_argument("--no-cache", action="store_true")
+    ap.add_argument("--resume", action="store_true",
+                    help="replay completed points from the sweep journal "
+                         "and run only the remainder")
+    ap.add_argument("--journal", default=None,
+                    help="journal path (default: .sweep_journal.jsonl "
+                         "next to --out)")
+    ap.add_argument("--no-journal", action="store_true",
+                    help="disable the crash-resume journal")
+    ap.add_argument("--chaos", default=None, metavar="JSON",
+                    help="arm the deterministic fault-injection harness, "
+                         'e.g. \'{"seed":1,"rate":0.2}\'')
     args = ap.parse_args(argv)
+
+    if args.chaos is not None:
+        try:
+            spec = chaos.ChaosSpec.from_json(args.chaos)
+        except (ValueError, TypeError) as e:
+            ap.error(f"--chaos: {e}")
+        os.environ[chaos.ENV_KEY] = spec.to_json()
 
     cache_dir = None if args.no_cache else args.cache_dir
     if args.smoke:
         if args.no_cache:
             ap.error("--smoke needs the cache (its repeated run asserts "
                      "cache hits); drop --no-cache")
+        if args.resume:
+            ap.error("--smoke runs are journal-free; drop --resume")
         doc = run_smoke(out=args.out or SMOKE_OUT, jobs=args.jobs,
                         cache_dir=cache_dir)
         return 1 if doc["errors"] else 0
 
+    out = args.out or DEFAULT_OUT
+    if args.no_journal:
+        journal_path = None
+    elif args.journal is not None:
+        journal_path = args.journal
+    else:
+        journal_path = os.path.join(os.path.dirname(out) or ".",
+                                    ".sweep_journal.jsonl")
     cfg = SweepConfig(
         kernels=(args.kernels.split(",") if args.kernels
                  else DEFAULT_KERNELS),
         sizes=parse_sizes(args.sizes) if args.sizes else DEFAULT_SIZES,
         backend=args.backend, per_point_timeout_s=args.timeout,
-        jobs=args.jobs, cache_dir=cache_dir)
-    doc = run_sweep(cfg)
-    _emit(doc, args.out or DEFAULT_OUT)
+        jobs=args.jobs, cache_dir=cache_dir, journal_path=journal_path)
+    doc = run_sweep(cfg, resume=args.resume)
+    _emit(doc, out)
     return 1 if doc["errors"] else 0
 
 

@@ -3,20 +3,26 @@
 One sweep = a cross product of registered CIL kernels and CGRA
 geometries, compiled through one :class:`repro.toolchain.Toolchain`
 session: ``compile_many`` resolves cache hits (``MappingCache``) in the
-parent, fans misses out to a ``ProcessPoolExecutor``
-(``os.cpu_count()``-bounded, per-point ``total_timeout_s`` budgets,
-``--jobs 1`` inline mode) where each point runs the full incremental SAT
-mapping with the bitstream assembler as CEGAR oracle, and runs the
-assemble/metrics stages in the parent.  Run-time metrics (latency
-cycles, energy) come from the calibrated model over the assembled
-instruction grid — no JAX required — so the whole sweep works with zero
-optional extras.
+parent and fans misses out to the supervised worker fleet
+(:mod:`repro.toolchain.resilience` — parent-enforced per-point
+deadlines, crash healing, retry/degradation ladder; ``--jobs 1`` inline
+mode), where each point runs the full incremental SAT mapping with the
+bitstream assembler as CEGAR oracle; the assemble/metrics stages run in
+the parent.  Run-time metrics (latency cycles, energy) come from the
+calibrated model over the assembled instruction grid — no JAX required —
+so the whole sweep works with zero optional extras.
+
+Sweeps are crash-resumable: with a journal path configured, every
+completed point is durably appended to a ``.sweep_journal.jsonl``
+(:mod:`repro.dse.journal`) and ``run_sweep(cfg, resume=True)`` replays
+matching rows, handing ``compile_many`` only the remainder.
 
 This module keeps only what is sweep-specific: the row/document format
 and the Pareto analysis.  Rows are emitted in deterministic kernel-major
 order and all floats are rounded on the way out, so identical inputs
 produce byte-identical Pareto sections (the property the CI regression
-gate checks).
+gate checks) — and a resumed sweep's correctness projection is
+byte-identical to an uninterrupted one.
 """
 from __future__ import annotations
 
@@ -25,10 +31,13 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core.mapper import MapperConfig, resolve_backend
+from ..toolchain import chaos
 from ..toolchain.artifacts import CompileResult
 from ..toolchain.oracles import ORACLE_TAG  # noqa: F401 (compat re-export)
+from ..toolchain.resilience import ResilienceConfig
 from ..toolchain.session import Toolchain
 from .cache import MappingCache
+from .journal import SweepJournal
 from .pareto import pareto_analysis
 from .space import DEFAULT_KERNELS, DEFAULT_SIZES, DesignPoint, build_space
 
@@ -43,6 +52,8 @@ class SweepConfig:
     ii_max: int = 32
     jobs: Optional[int] = None          # None -> os.cpu_count(), capped
     cache_dir: Optional[str] = "results/dse_cache"  # None disables caching
+    journal_path: Optional[str] = None  # None disables crash-resume journal
+    resilience: Optional[ResilienceConfig] = None  # None -> fleet defaults
 
     def mapper_config(self) -> MapperConfig:
         return MapperConfig(backend=self.backend,
@@ -50,16 +61,44 @@ class SweepConfig:
                             total_timeout_s=self.per_point_timeout_s,
                             ii_max=self.ii_max)
 
+    def signature(self) -> Dict:
+        """Everything that determines row *content* (not pacing): the
+        journal refuses to resume across a change in any of these."""
+        return {
+            "kernels": list(self.kernels),
+            "sizes": [f"{r}x{c}" for r, c in self.sizes],
+            "backend": resolve_backend(self.backend),
+            "per_point_timeout_s": self.per_point_timeout_s,
+            "per_ii_timeout_s": self.per_ii_timeout_s,
+            "ii_max": self.ii_max,
+        }
+
+
+def _annotate_resilience(row: Dict, cr: CompileResult) -> None:
+    """Fleet fields, emitted only when non-default so fault-free rows
+    (and the committed baselines) stay byte-identical."""
+    if cr.failure is not None:
+        row["failure_kind"] = cr.failure.get("kind")
+        row["failure"] = {k: cr.failure[k]
+                          for k in ("stage", "type", "message", "traceback")
+                          if cr.failure.get(k) is not None}
+    if cr.retries:
+        row["retries"] = cr.retries
+    if cr.degraded is not None:
+        row["degraded"] = cr.degraded
+
 
 def _record(point: DesignPoint, cr: CompileResult) -> Dict:
     """One sweep row from one compile result (deterministic fields)."""
-    if cr.status == "error":
-        return {"kernel": point.kernel, "size": point.size,
-                "rows": point.rows, "cols": point.cols,
-                "num_pes": point.num_pes, "status": "error",
-                "ii": None, "error": cr.error,
-                "map_time_s": round(cr.map_time_s, 4),
-                "cache_hit": cr.cache_hit}
+    if cr.status in ("error", "failed"):
+        row = {"kernel": point.kernel, "size": point.size,
+               "rows": point.rows, "cols": point.cols,
+               "num_pes": point.num_pes, "status": cr.status,
+               "ii": None, "error": cr.error,
+               "map_time_s": round(cr.map_time_s, 4),
+               "cache_hit": cr.cache_hit}
+        _annotate_resilience(row, cr)
+        return row
     res = cr.map_result
     row = {
         "kernel": point.kernel, "size": point.size,
@@ -84,11 +123,35 @@ def _record(point: DesignPoint, cr: CompileResult) -> Dict:
         })
     else:
         row["ii"] = None
+    _annotate_resilience(row, cr)
     return row
 
 
-def run_sweep(cfg: Optional[SweepConfig] = None) -> Dict:
-    """Execute the sweep; returns the full JSON-ready result document."""
+def _resilience_summary(rows: Sequence[Dict]) -> Dict:
+    """Sweep-level fleet aggregate (all zeros on a fault-free run)."""
+    kinds: Dict[str, int] = {}
+    for r in rows:
+        kind = r.get("failure_kind")
+        if kind:
+            kinds[kind] = kinds.get(kind, 0) + 1
+    return {
+        "retries": sum(r.get("retries", 0) for r in rows),
+        "degraded": sum(1 for r in rows if r.get("degraded") is not None),
+        "failed": sum(1 for r in rows if r["status"] == "failed"),
+        "failure_kinds": dict(sorted(kinds.items())),
+    }
+
+
+def run_sweep(cfg: Optional[SweepConfig] = None,
+              resume: bool = False) -> Dict:
+    """Execute the sweep; returns the full JSON-ready result document.
+
+    With ``cfg.journal_path`` set, every completed point is durably
+    journaled; ``resume=True`` replays rows from a matching journal and
+    compiles only the remainder (a signature mismatch falls back to a
+    full run).  Never raises for a per-point failure: the fleet types
+    every loss and the row lands as ``status="failed"`` at worst.
+    """
     cfg = cfg or SweepConfig()
     t0 = time.monotonic()
     points = build_space(cfg.kernels, cfg.sizes)
@@ -97,10 +160,44 @@ def run_sweep(cfg: Optional[SweepConfig] = None) -> Dict:
     arch = tuple(cfg.sizes[0]) if cfg.sizes else "2x2"
     tc = Toolchain(arch, cfg.mapper_config(), cache=cache,
                    oracle="assembler")
-    results = tc.compile_many(cfg.kernels, grids=cfg.sizes, jobs=cfg.jobs)
 
-    rows = [_record(pt, cr) for pt, cr in zip(points, results)]
-    errors = sum(1 for r in rows if r["status"] == "error")
+    journal = SweepJournal(cfg.journal_path) if cfg.journal_path else None
+    done_rows: Dict[Tuple[str, str], Dict] = {}
+    if journal is not None:
+        done_rows = journal.start(cfg.signature(), resume=resume)
+    resumed = sum(1 for p in points if (p.kernel, p.size) in done_rows)
+
+    # compile_many keys points as (kernel, grid-index), kernel-major —
+    # the same order build_space emits DesignPoints in
+    size_index = {f"{r}x{c}": gi for gi, (r, c) in enumerate(cfg.sizes)}
+    point_of = {(p.kernel, size_index[p.size]): p for p in points}
+    remaining = [(p.kernel, size_index[p.size]) for p in points
+                 if (p.kernel, p.size) not in done_rows]
+
+    fresh_rows: Dict[Tuple[str, str], Dict] = {}
+    completed = 0
+
+    def on_result(pt: Tuple[str, int], cr: CompileResult) -> None:
+        nonlocal completed
+        p = point_of[pt]
+        row = _record(p, cr)
+        fresh_rows[(p.kernel, p.size)] = row
+        if journal is not None:
+            journal.record(p.kernel, p.size, row)
+        completed += 1
+        chaos.maybe_abort(completed)  # chaos: simulate a mid-sweep kill
+
+    try:
+        tc.compile_many(cfg.kernels, grids=cfg.sizes, jobs=cfg.jobs,
+                        points=remaining, on_result=on_result,
+                        resilience=cfg.resilience)
+    finally:
+        if journal is not None:
+            journal.close()
+
+    rows = [done_rows.get((p.kernel, p.size))
+            or fresh_rows[(p.kernel, p.size)] for p in points]
+    errors = sum(1 for r in rows if r["status"] in ("error", "failed"))
     doc = {
         "bench": "dse",
         "backend": resolve_backend(cfg.backend),
@@ -110,8 +207,14 @@ def run_sweep(cfg: Optional[SweepConfig] = None) -> Dict:
         "points": rows,
         "pareto": pareto_analysis(rows),
         "cache": (cache.stats() if cache is not None
-                  else {"dir": None, "hits": 0, "misses": 0}),
+                  else {"dir": None, "hits": 0, "misses": 0, "corrupt": 0}),
         "errors": errors,
         "wall_time_s": round(time.monotonic() - t0, 3),
     }
+    if resumed:
+        doc["resumed_points"] = resumed
+    resil = _resilience_summary(rows)
+    if (resil["retries"] or resil["degraded"] or resil["failed"]
+            or resil["failure_kinds"]):
+        doc["resilience"] = resil
     return doc

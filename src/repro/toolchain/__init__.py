@@ -19,6 +19,7 @@ thin consumers of this package.
 
 from .artifacts import STAGES, CompileResult, Program, StageError
 from .oracles import ORACLE_TAG, assembler_oracle, resolve_oracle
+from .resilience import DEGRADATION_RUNGS, FailureKind, ResilienceConfig
 from .session import Toolchain, resolve_arch
 
 __all__ = [
@@ -29,6 +30,9 @@ __all__ = [
     "ORACLE_TAG",
     "assembler_oracle",
     "resolve_oracle",
+    "DEGRADATION_RUNGS",
+    "FailureKind",
+    "ResilienceConfig",
     "Toolchain",
     "resolve_arch",
 ]

@@ -81,9 +81,19 @@ class CompileResult:
     """End-to-end artifact bundle of one ``Toolchain.compile()`` call.
 
     ``status`` is ``"ok"`` when every stage ran; otherwise it carries the
-    map-stage verdict (``"unsat-capped"`` / ``"timeout"``) or ``"error"``
-    for an exception, with ``stage`` naming where the pipeline stopped and
-    ``error`` the formatted cause.
+    map-stage verdict (``"unsat-capped"`` / ``"timeout"``), ``"error"``
+    for a single-shot exception, or ``"failed"`` when the resilient fleet
+    exhausted its whole retry/degradation ladder — with ``stage`` naming
+    where the pipeline stopped and ``error`` the formatted cause.
+
+    The fleet additionally threads provenance through: ``failure`` is the
+    structured record of the last failure encountered (``kind`` from
+    :class:`~repro.toolchain.resilience.FailureKind`, plus stage,
+    exception type and truncated traceback — set even when a retry
+    recovered), ``retries`` counts attempts beyond the first, and
+    ``degraded`` names the degradation rung that produced the result
+    (``"backend-flip"`` / ``"oracle-off"`` / ``"ii-capped"``), ``None``
+    for a first-class result.
     """
 
     kernel: str
@@ -102,10 +112,23 @@ class CompileResult:
     error: Optional[str] = None
     cache_hit: bool = False
     timings: Dict[str, float] = field(default_factory=dict)
+    #: structured record of the last failure (kind/stage/type/traceback);
+    #: present even when a retry or degradation rung recovered the point
+    failure: Optional[Dict] = None
+    #: attempts beyond the first the fleet spent on this point
+    retries: int = 0
+    #: degradation rung that produced the result, ``None`` if first-class
+    degraded: Optional[str] = None
 
     @property
     def ok(self) -> bool:
         return self.status == "ok"
+
+    @property
+    def failure_kind(self) -> Optional[str]:
+        """Typed :class:`~repro.toolchain.resilience.FailureKind` of the
+        last recorded failure, or ``None``."""
+        return self.failure.get("kind") if self.failure else None
 
     @property
     def size(self) -> str:
@@ -146,6 +169,14 @@ class CompileResult:
         }
         if self.arch is not None:
             out["arch"] = self.arch
+        # resilience provenance: emitted only when set, so pre-fleet
+        # digests (and the committed CI baselines) stay byte-identical
+        if self.failure is not None:
+            out["failure"] = dict(self.failure)
+        if self.retries:
+            out["retries"] = self.retries
+        if self.degraded is not None:
+            out["degraded"] = self.degraded
         return out
 
     @classmethod
@@ -187,6 +218,9 @@ class CompileResult:
             error=d.get("error"),
             cache_hit=d.get("cache_hit", False),
             timings=dict(d.get("timings", {})),
+            failure=d.get("failure"),
+            retries=d.get("retries", 0),
+            degraded=d.get("degraded"),
         )
 
     def summary(self) -> Dict:
@@ -205,6 +239,12 @@ class CompileResult:
         }
         if self.arch is not None:
             out["arch"] = self.arch
+        if self.failure is not None:
+            out["failure"] = dict(self.failure)
+        if self.retries:
+            out["retries"] = self.retries
+        if self.degraded is not None:
+            out["degraded"] = self.degraded
         if self.map_result is not None:
             out["backend"] = self.map_result.backend
             out["map_status"] = self.map_result.status

@@ -1,0 +1,578 @@
+"""Supervised worker fleet for ``compile_many`` — crash-safe, deadline-
+safe, never loses a point.
+
+The bare ``ProcessPoolExecutor`` it replaces had three failure modes
+that killed whole sweeps: a segfaulting solver worker raised
+``BrokenProcessPool`` out of ``compile_many``, a wedged CDCL solve
+stalled its slot forever (the per-point ``total_timeout_s`` is enforced
+*cooperatively* inside the worker), and any transient exception
+collapsed into an opaque per-point ``"error"`` row.  This module owns
+the countermeasures:
+
+**Supervision.**  :func:`run_supervised` keeps ``jobs`` long-lived
+worker processes, each driven over its own pipe, and multiplexes on the
+parent side with ``multiprocessing.connection.wait``.  The parent — not
+the worker — enforces a wall-clock deadline per attempt
+(``deadline_factor * total_timeout_s + deadline_slack_s``): a worker
+that blows it is SIGKILLed, its slot is respawned, and the point goes
+back on the queue.  A worker that dies on its own (segfault, OOM kill)
+surfaces as EOF on its pipe; the supervisor classifies the exit code,
+heals the pool, and requeues — ``BrokenProcessPool`` cannot happen
+because there is no shared pool state to break.
+
+**Retry, then degrade.**  Each point climbs a ladder:
+
+1. up to ``max_retries`` plain retries (transient faults: crash,
+   deadline, OOM), with exponential backoff and *deterministic* jitter
+   (hash of the point key and attempt — reruns behave identically);
+2. ``backend-flip``: re-solve on the other SAT backend (z3 <-> cdcl;
+   skipped when the other backend is not installed);
+3. ``oracle-off``: drop the CEGAR oracle, map-only;
+4. ``ii-capped``: cap the II ladder at ``degraded_ii_max`` so the search
+   cannot wander into the expensive tail;
+5. a terminal row — ``status="failed"`` with a typed
+   :class:`FailureKind` — never a lost point, never an exception out of
+   ``compile_many``.
+
+Rungs 2-4 apply cumulatively; a result produced on rung N is tagged
+``degraded=<rung name>`` and is **not** written to the mapping cache
+(its config differs from the cache key's).
+
+**Attribution.**  Worker-side exceptions come back structured —
+``{kind, stage, type, message, traceback}`` — not flattened to a bare
+string, so fleet failures are debuggable post-hoc from the DSE rows.
+
+The deterministic chaos harness (:mod:`repro.toolchain.chaos`) injects
+crashes/hangs/solver errors at the worker entry point
+(:func:`_run_map_payload`) so all of the above is exercised by tests and
+the nightly chaos CI lane.
+"""
+
+from __future__ import annotations
+
+import hashlib
+import heapq
+import multiprocessing
+import os
+import signal
+import time
+import traceback as _traceback
+from dataclasses import dataclass, field
+from multiprocessing.connection import wait as _conn_wait
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from . import chaos
+
+
+class FailureKind:
+    """Typed failure taxonomy threaded through ``CompileResult`` and DSE
+    rows (``failure["kind"]``).  Plain strings so rows stay JSON-native."""
+
+    WORKER_CRASH = "worker-crash"   # worker process died (segfault, _exit)
+    DEADLINE = "deadline"           # parent-side wall-clock kill
+    SOLVER_ERROR = "solver-error"   # exception inside the map stage
+    CACHE_CORRUPT = "cache-corrupt"  # quarantined cache entry for the key
+    OOM = "oom"                     # MemoryError / SIGKILLed by the kernel
+
+    ALL = (WORKER_CRASH, DEADLINE, SOLVER_ERROR, CACHE_CORRUPT, OOM)
+
+
+#: degradation rung names, in ladder order
+DEGRADATION_RUNGS = ("backend-flip", "oracle-off", "ii-capped")
+
+#: characters of formatted traceback kept in a failure record (the tail —
+#: the raise site — is the useful end)
+TRACEBACK_LIMIT = 2000
+
+
+@dataclass(frozen=True)
+class ResilienceConfig:
+    """Fleet policy: retries, backoff, deadlines, degradation ladder."""
+
+    #: plain same-config retries before the ladder starts degrading
+    max_retries: int = 2
+    #: exponential backoff: ``base * 2**retry`` capped at ``cap``
+    backoff_base_s: float = 0.05
+    backoff_cap_s: float = 2.0
+    #: deterministic jitter fraction added on top of the backoff
+    jitter: float = 0.25
+    #: parent-side deadline = ``factor * total_timeout_s + slack`` (the
+    #: in-worker budget is cooperative; this one is not)
+    deadline_factor: float = 1.5
+    deadline_slack_s: float = 5.0
+    #: rungs to climb after retries are exhausted, in order
+    degradation: Tuple[str, ...] = DEGRADATION_RUNGS
+    #: ``ii_max`` cap applied by the ``ii-capped`` rung
+    degraded_ii_max: int = 8
+    #: seed for the deterministic backoff jitter
+    seed: int = 0
+
+    def point_deadline_s(self, total_timeout_s: Optional[float],
+                         ) -> Optional[float]:
+        """Wall-clock kill deadline for one attempt (``None`` = no
+        parent-side deadline when the point has no budget)."""
+        if total_timeout_s is None:
+            return None
+        return total_timeout_s * self.deadline_factor + self.deadline_slack_s
+
+    def backoff_s(self, key: str, retry: int) -> float:
+        """Deterministic-jittered exponential backoff before a retry."""
+        base = min(self.backoff_cap_s,
+                   self.backoff_base_s * (2.0 ** max(retry, 0)))
+        h = hashlib.sha256(f"{self.seed}|{key}|{retry}".encode()).digest()
+        u = int.from_bytes(h[:8], "big") / 2.0**64
+        return base * (1.0 + self.jitter * u)
+
+
+def failure_record(kind: str, stage: str, exc: Optional[BaseException] = None,
+                   message: Optional[str] = None,
+                   attempt: int = 0) -> Dict[str, Any]:
+    """The structured failure dict carried on results and DSE rows."""
+    rec: Dict[str, Any] = {"kind": kind, "stage": stage, "attempt": attempt}
+    if exc is not None:
+        rec["type"] = type(exc).__name__
+        rec["message"] = str(exc)
+        tb = "".join(_traceback.format_exception(
+            type(exc), exc, exc.__traceback__))
+        rec["traceback"] = tb[-TRACEBACK_LIMIT:]
+    elif message is not None:
+        rec["message"] = message
+    return rec
+
+
+def failure_text(failure: Optional[Dict]) -> Optional[str]:
+    """Flat ``"TypeName: message"`` digest of a failure record — the same
+    shape :func:`repro.toolchain.artifacts.format_error` produces, for
+    the legacy ``CompileResult.error`` field."""
+    if not failure:
+        return None
+    t, m = failure.get("type"), failure.get("message")
+    if t and m is not None:
+        return f"{t}: {m}"
+    return m or failure.get("kind")
+
+
+def classify_exception(exc: BaseException) -> str:
+    """Map a worker-side exception onto the failure taxonomy."""
+    if isinstance(exc, MemoryError):
+        return FailureKind.OOM
+    return FailureKind.SOLVER_ERROR
+
+
+def _classify_exitcode(exitcode: Optional[int]) -> str:
+    """A worker that died without sending a result: SIGKILL is the
+    kernel OOM killer's signature; anything else is a crash."""
+    if exitcode is not None and exitcode == -signal.SIGKILL:
+        return FailureKind.OOM
+    return FailureKind.WORKER_CRASH
+
+
+def _arch_key(grid) -> str:
+    """Deterministic architecture key for chaos decisions (stable across
+    parent and workers)."""
+    fp = grid.arch_fingerprint()
+    return f"{grid.spec.rows}x{grid.spec.cols}" + (f"#{fp}" if fp else "")
+
+
+# ---------------------------------------------------------------------------
+# the worker entry point (one SAT mapping per message, chaos-aware)
+# ---------------------------------------------------------------------------
+
+
+def _run_map_payload(payload: Dict[str, Any],
+                     inline: bool = False) -> Dict[str, Any]:
+    """One (kernel, grid, config, oracle) SAT mapping.  Never raises:
+    failures come back as ``{"failure": {...}}`` with stage attribution
+    and a truncated traceback.  The worker never touches the on-disk
+    cache — the parent owns it."""
+    from ..core.mapper import MapperConfig
+    from .session import Toolchain
+
+    kernel = payload["kernel"]
+    grid = payload["grid"]
+    attempt = payload.get("attempt", 0)
+
+    spec = chaos.active()
+    if spec is not None:
+        kind = spec.decide(kernel, _arch_key(grid), attempt)
+        if kind in ("crash", "hang", "solver-error"):
+            try:
+                chaos.inject_worker_fault(kind, spec, inline=inline)
+            except chaos.ChaosError as e:
+                return {
+                    "failure": failure_record(
+                        FailureKind.SOLVER_ERROR, "map", e, attempt=attempt),
+                    "map_time_s": 0.0,
+                }
+
+    stage = "source"
+    t0 = time.monotonic()
+    try:
+        tc = Toolchain(grid, MapperConfig(**payload["cfg"]),
+                       oracle=payload["oracle"])
+        prog = tc.program(kernel)
+        stage = "map"
+        res, _hit = tc._map_cached(prog)
+    except BaseException as e:
+        if isinstance(e, (KeyboardInterrupt, SystemExit)):
+            raise
+        err_stage = getattr(e, "stage", stage)
+        return {
+            "failure": failure_record(classify_exception(e), err_stage, e,
+                                      attempt=attempt),
+            "map_time_s": time.monotonic() - t0,
+        }
+    return {"result": res.to_dict(), "map_time_s": time.monotonic() - t0}
+
+
+def _die_with_parent() -> None:
+    """Ask the kernel to SIGKILL this worker when its parent dies
+    (Linux ``PR_SET_PDEATHSIG``): a worker mid-solve or mid-(injected)-
+    hang cannot watch its pipe for EOF, and must not outlive a killed
+    sweep holding its stdout/journal fds open.  Best-effort no-op on
+    platforms without ``prctl``."""
+    try:
+        import ctypes
+
+        libc = ctypes.CDLL(None, use_errno=True)
+        libc.prctl(1, signal.SIGKILL)  # 1 = PR_SET_PDEATHSIG
+        if os.getppid() == 1:  # parent already gone: the signal is lost
+            os._exit(0)
+    except Exception:
+        pass
+
+
+def _worker_loop(conn, peer_conns=()) -> None:
+    """Long-lived worker: receive ``(task_id, payload)``, answer
+    ``(task_id, outcome)``; exit on EOF/sentinel (parent death included —
+    a closed pipe ends the loop, no orphan can linger).
+
+    ``peer_conns`` are the parent-side pipe ends inherited across
+    ``fork`` — the siblings' and this worker's own (the parent closes
+    our ``child_conn`` end only after the fork).  They must be closed
+    here, or a worker keeps its own pipe writable and never sees EOF
+    when the parent dies (the orphan fleet a chaos
+    ``abort_after_points`` exit would otherwise leave behind)."""
+    _die_with_parent()
+    for peer in peer_conns:
+        try:
+            peer.close()
+        except OSError:
+            pass
+    while True:
+        try:
+            msg = conn.recv()
+        except (EOFError, OSError, KeyboardInterrupt):
+            return
+        if msg is None:
+            return
+        task_id, payload = msg
+        out = _run_map_payload(payload)
+        try:
+            conn.send((task_id, out))
+        except (BrokenPipeError, OSError):
+            return
+
+
+# ---------------------------------------------------------------------------
+# per-point ladder state
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class MapTask:
+    """One design point riding the retry/degradation ladder."""
+
+    key: Any                       # opaque caller key (e.g. (kernel, gi))
+    kernel: str
+    grid: Any                      # PEGrid (pickles whole)
+    cfg: Dict[str, Any]            # MapperConfig asdict, mutated per rung
+    oracle: Any                    # "assembler" | None | (tag, factory)
+    attempt: int = 0               # global attempt counter (chaos key)
+    retries_in_rung: int = 0
+    rung: int = -1                 # -1 = original config
+    rung_label: Optional[str] = None
+    not_before: float = 0.0        # monotonic backoff eligibility
+    map_time_s: float = 0.0        # accumulated across attempts
+    failures: List[Dict] = field(default_factory=list)
+
+    def payload(self) -> Dict[str, Any]:
+        return {"kernel": self.kernel, "grid": self.grid, "cfg": self.cfg,
+                "oracle": self.oracle, "attempt": self.attempt}
+
+    def attempt_id(self) -> Tuple[int, int]:
+        """Unique per *attempt*, so a stale answer from a worker we
+        decided to kill can never be mistaken for the retry's answer."""
+        return (id(self), self.attempt)
+
+    def deadline_s(self, rcfg: ResilienceConfig) -> Optional[float]:
+        return rcfg.point_deadline_s(self.cfg.get("total_timeout_s"))
+
+
+def _rung_applies(task: MapTask, rung: str, rcfg: ResilienceConfig) -> bool:
+    """Apply one degradation rung to the task config (cumulatively);
+    ``False`` when the rung has nothing to change."""
+    from ..core.backends import resolve_backend
+
+    if rung == "backend-flip":
+        current = resolve_backend(task.cfg.get("backend", "auto"))
+        if current == "z3":
+            other = "cdcl"
+        else:
+            try:
+                import z3  # noqa: F401
+                other = "z3"
+            except ImportError:
+                return False
+        task.cfg = dict(task.cfg, backend=other)
+        return True
+    if rung == "oracle-off":
+        if task.oracle is None:
+            return False
+        task.oracle = None
+        return True
+    if rung == "ii-capped":
+        capped = min(task.cfg.get("ii_max", 50), rcfg.degraded_ii_max)
+        if capped == task.cfg.get("ii_max"):
+            return False
+        task.cfg = dict(task.cfg, ii_max=capped)
+        return True
+    raise ValueError(f"unknown degradation rung {rung!r}")
+
+
+def _advance(task: MapTask, failure: Dict, rcfg: ResilienceConfig,
+             now: float) -> bool:
+    """Record ``failure`` and move the task to its next ladder position.
+    Returns ``False`` when the ladder is exhausted (terminal failure)."""
+    task.failures.append(failure)
+    task.attempt += 1
+    if task.retries_in_rung < rcfg.max_retries:
+        retry = task.retries_in_rung
+        task.retries_in_rung += 1
+        task.not_before = now + rcfg.backoff_s(str(task.key), retry)
+        return True
+    while True:
+        task.rung += 1
+        if task.rung >= len(rcfg.degradation):
+            return False
+        rung = rcfg.degradation[task.rung]
+        if _rung_applies(task, rung, rcfg):
+            task.rung_label = rung
+            task.retries_in_rung = rcfg.max_retries  # one shot per rung
+            task.not_before = now
+            return True
+
+
+def _finalize(task: MapTask, out: Optional[Dict]) -> Dict[str, Any]:
+    """The per-point outcome handed back to ``compile_many``."""
+    outcome: Dict[str, Any] = {
+        "map_time_s": task.map_time_s,
+        "attempts": task.attempt + 1,
+        "degraded": task.rung_label,
+        "failure": task.failures[-1] if task.failures else None,
+    }
+    if out is not None and "result" in out:
+        outcome["result"] = out["result"]
+    return outcome
+
+
+# ---------------------------------------------------------------------------
+# the supervised fleet
+# ---------------------------------------------------------------------------
+
+
+class _Worker:
+    """One supervised slot: a process plus its dedicated duplex pipe."""
+
+    __slots__ = ("proc", "conn", "task", "deadline_at")
+
+    def __init__(self, ctx, peers=()):
+        self.conn, child_conn = ctx.Pipe(duplex=True)
+        # every parent-side conn open at fork time is inherited by the
+        # child — the peers' AND our own (child_conn.close() below only
+        # runs in the parent).  The child must drop them all, or each
+        # worker keeps its own pipe writable and never sees EOF when the
+        # parent dies.
+        close_in_child = [w.conn for w in peers] + [self.conn]
+        self.proc = ctx.Process(target=_worker_loop,
+                                args=(child_conn, close_in_child),
+                                daemon=True)
+        self.proc.start()
+        child_conn.close()
+        self.task: Optional[MapTask] = None
+        self.deadline_at: Optional[float] = None
+
+    @property
+    def busy(self) -> bool:
+        return self.task is not None
+
+    def assign(self, task: MapTask, rcfg: ResilienceConfig,
+               now: float) -> None:
+        self.task = task
+        dl = task.deadline_s(rcfg)
+        self.deadline_at = (now + dl) if dl is not None else None
+        self.conn.send((task.attempt_id(), task.payload()))
+
+    def shutdown(self) -> None:
+        try:
+            if self.proc.is_alive():
+                self.conn.send(None)
+        except (BrokenPipeError, OSError):
+            pass
+        self.conn.close()
+        self.proc.join(timeout=0.5)
+        if self.proc.is_alive():
+            self.proc.kill()
+            self.proc.join(timeout=1.0)
+
+    def kill(self) -> Optional[int]:
+        """SIGKILL the slot (deadline enforcement); returns exit code."""
+        self.proc.kill()
+        self.proc.join(timeout=5.0)
+        self.conn.close()
+        return self.proc.exitcode
+
+
+def run_supervised(tasks: List[MapTask], jobs: int,
+                   rcfg: Optional[ResilienceConfig] = None,
+                   on_outcome: Optional[Callable[[Any, Dict], None]] = None,
+                   ) -> Dict[Any, Dict]:
+    """Drive ``tasks`` through a self-healing worker fleet.
+
+    Returns ``{task.key: outcome}``; ``on_outcome`` additionally fires in
+    completion order (journaling hook).  Never raises for per-point
+    failures — every task terminates with a result or a typed failure.
+    """
+    rcfg = rcfg or ResilienceConfig()
+    ctx = multiprocessing.get_context()
+    outcomes: Dict[Any, Dict] = {}
+    seq = 0
+    ready: List[Tuple[float, int, MapTask]] = []  # (not_before, seq, task)
+    for t in tasks:
+        heapq.heappush(ready, (t.not_before, seq, t))
+        seq += 1
+    n = max(1, min(jobs, len(tasks)))
+    workers: List[_Worker] = []
+
+    def settle(task: MapTask, out: Optional[Dict], failure: Optional[Dict],
+               now: float) -> None:
+        nonlocal seq
+        task.map_time_s += (out or {}).get("map_time_s", 0.0)
+        if out is not None and "result" in out:
+            outcome = _finalize(task, out)
+            outcomes[task.key] = outcome
+            if on_outcome is not None:
+                on_outcome(task.key, outcome)
+            return
+        fail = failure if failure is not None else (out or {}).get("failure")
+        if fail is None:  # defensive: a malformed worker answer
+            fail = failure_record(FailureKind.WORKER_CRASH, "map",
+                                  message="malformed worker answer",
+                                  attempt=task.attempt)
+        if _advance(task, fail, rcfg, now):
+            heapq.heappush(ready, (task.not_before, seq, task))
+            seq += 1
+        else:
+            outcome = _finalize(task, None)
+            outcomes[task.key] = outcome
+            if on_outcome is not None:
+                on_outcome(task.key, outcome)
+
+    try:
+        for _ in range(n):
+            workers.append(_Worker(ctx, peers=workers))
+        while len(outcomes) < len(tasks):
+            now = time.monotonic()
+            # assign eligible tasks to idle slots
+            for w in workers:
+                if w.busy or not ready:
+                    continue
+                if ready[0][0] > now:
+                    continue
+                _, _, task = heapq.heappop(ready)
+                w.assign(task, rcfg, now)
+            busy = [w for w in workers if w.busy]
+            # how long may we block? until the nearest deadline or the
+            # nearest backoff-eligibility, capped for responsiveness
+            timeout = 0.5
+            for w in busy:
+                if w.deadline_at is not None:
+                    timeout = min(timeout, max(w.deadline_at - now, 0.0))
+            if ready and not all(w.busy for w in workers):
+                timeout = min(timeout, max(ready[0][0] - now, 0.0))
+            if not busy:
+                if ready:
+                    time.sleep(min(timeout, 0.05)
+                               if ready[0][0] <= now else timeout)
+                continue
+            for conn in _conn_wait([w.conn for w in busy], timeout):
+                w = next(x for x in busy if x.conn is conn)
+                task = w.task
+                try:
+                    task_id, out = conn.recv()
+                except (EOFError, OSError):
+                    # the worker died under the task: classify and heal
+                    w.proc.join(timeout=5.0)
+                    kind = _classify_exitcode(w.proc.exitcode)
+                    fail = failure_record(
+                        kind, "map", attempt=task.attempt,
+                        message=(f"worker exited with code "
+                                 f"{w.proc.exitcode}"))
+                    w.conn.close()  # before the respawn fork: no leak
+                    idx = workers.index(w)
+                    others = workers[:idx] + workers[idx + 1:]
+                    workers[idx] = _Worker(ctx, peers=others)
+                    settle(task, None, fail, time.monotonic())
+                    continue
+                if task_id != task.attempt_id():
+                    continue  # stale answer from a pre-kill attempt
+                w.task, w.deadline_at = None, None
+                settle(task, out, None, time.monotonic())
+            # parent-side deadline enforcement: kill + recycle + requeue
+            now = time.monotonic()
+            for w in list(workers):
+                if not w.busy or w.deadline_at is None or now < w.deadline_at:
+                    continue
+                task = w.task
+                w.kill()  # closes the pipe before the respawn fork
+                idx = workers.index(w)
+                others = workers[:idx] + workers[idx + 1:]
+                workers[idx] = _Worker(ctx, peers=others)
+                fail = failure_record(
+                    FailureKind.DEADLINE, "map", attempt=task.attempt,
+                    message=(f"worker killed after exceeding the "
+                             f"{task.deadline_s(rcfg):.1f}s point deadline"))
+                settle(task, None, fail, now)
+    finally:
+        for w in workers:
+            w.shutdown()
+    return outcomes
+
+
+def run_inline(tasks: List[MapTask],
+               rcfg: Optional[ResilienceConfig] = None,
+               on_outcome: Optional[Callable[[Any, Dict], None]] = None,
+               ) -> Dict[Any, Dict]:
+    """The ``jobs=1`` path: same ladder, no subprocesses.  Deadlines stay
+    cooperative (``total_timeout_s`` inside the solver) — an inline run
+    cannot kill itself — and chaos ``crash``/``hang`` degrade to raised
+    errors (see :func:`chaos.inject_worker_fault`)."""
+    rcfg = rcfg or ResilienceConfig()
+    outcomes: Dict[Any, Dict] = {}
+    for task in tasks:
+        while True:
+            now = time.monotonic()
+            if task.not_before > now:
+                time.sleep(task.not_before - now)
+            out = _run_map_payload(task.payload(), inline=True)
+            task.map_time_s += out.get("map_time_s", 0.0)
+            if "result" in out:
+                outcome = _finalize(task, out)
+                break
+            if not _advance(task, out["failure"], rcfg, time.monotonic()):
+                outcome = _finalize(task, None)
+                break
+        outcomes[task.key] = outcome
+        if on_outcome is not None:
+            on_outcome(task.key, outcome)
+    return outcomes

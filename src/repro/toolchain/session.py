@@ -14,8 +14,12 @@ stages::
 ``compile()`` runs the stages end-to-end into a :class:`CompileResult`
 whose ``stage`` field names where a failing pipeline died;
 ``compile_many()`` fans a kernels x grids cross product through the
-process pool with cache hits resolved in the parent — the engine under
-``repro.dse`` sweeps and the ``python -m repro`` CLI.
+supervised worker fleet (:mod:`repro.toolchain.resilience`) with cache
+hits resolved in the parent — the engine under ``repro.dse`` sweeps and
+the ``python -m repro`` CLI.  The fleet enforces per-point wall-clock
+deadlines from the parent, heals crashed/hung workers, retries transient
+failures and degrades persistent ones, so ``compile_many`` never raises
+and never loses a point.
 
 Sources accepted by the ``program`` stage: a registry kernel name, a
 :class:`~repro.cgra.programs.LoopBuilder`, a traced kernel
@@ -29,8 +33,7 @@ from __future__ import annotations
 import dataclasses
 import os
 import time
-from concurrent.futures import ProcessPoolExecutor
-from typing import Dict, List, Optional, Sequence, Tuple, Union
+from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from ..archspec import ArchSpec, parse_arch
 from ..cgra.arch import PEGrid, make_grid
@@ -44,12 +47,29 @@ from ..core.mapper import (
     mapping_cache_key,
 )
 from ..core.mapping import Mapping
+from . import chaos
 from .artifacts import CompileResult, Program, StageError, format_error
 from .oracles import assembler_oracle, resolve_oracle
+from .resilience import (
+    FailureKind,
+    MapTask,
+    ResilienceConfig,
+    _arch_key,
+    failure_record,
+    failure_text,
+    run_inline,
+    run_supervised,
+)
 
 ArchLike = Union[PEGrid, ArchSpec, str, Tuple[int, int]]
 
 PointKey = Tuple[str, int]  # (kernel, grid index)
+
+#: map-stage verdicts worth caching: only terminal sat/unsat results.
+#: Timeouts get another chance on a less-loaded machine, and transient
+#: failures (worker crash, injected chaos, flaky IO) must never poison
+#: the content-addressed key for every future sweep.
+TERMINAL_MAP_STATUSES = ("mapped", "unsat-capped")
 
 
 def resolve_arch(arch: ArchLike) -> PEGrid:
@@ -389,19 +409,33 @@ class Toolchain:
         grids: Optional[Sequence[ArchLike]] = None,
         jobs: Optional[int] = None,
         config: Optional[MapperConfig] = None,
+        *,
+        points: Optional[Sequence[PointKey]] = None,
+        on_result: Optional[Callable[[PointKey, CompileResult], None]] = None,
+        resilience: Optional[ResilienceConfig] = None,
     ) -> List[CompileResult]:
         """Compile a kernels x grids cross product (kernel-major order).
 
-        Kernels must be registry names (the tasks cross a process-pool
-        pickle boundary).  ``grids`` accepts any :data:`ArchLike` —
-        geometry tuples, archspec strings/presets, prebuilt grids — and
+        Kernels must be registry names (the tasks cross a process pickle
+        boundary).  ``grids`` accepts any :data:`ArchLike` — geometry
+        tuples, archspec strings/presets, prebuilt grids — and
         same-geometry entries with different capability tables are
         distinct design points.  Cache hits are resolved in the parent
-        and skip solving entirely; misses fan out to a
-        ``ProcessPoolExecutor`` (``os.cpu_count()``-bounded; ``jobs=1``
-        runs inline).  Solved points are written back to the cache by the
-        parent.  Post-map stages always run in the parent — they are
-        cheap and keep worker payloads to plain dicts.
+        and skip solving entirely; misses fan out to the supervised
+        worker fleet (``os.cpu_count()``-bounded; ``jobs=1`` runs inline
+        with the same retry/degradation ladder but cooperative deadlines
+        only).  Solved points are written back to the cache by the
+        parent — terminal sat/unsat verdicts only, and never degraded
+        ones.  Post-map stages always run in the parent — they are cheap
+        and keep worker payloads to plain dicts.
+
+        ``points`` restricts the run to a subset of the cross product
+        (crash-resume: the sweep journal knows what is already done);
+        ``on_result`` fires in completion order as each point lands —
+        the journaling hook.  ``compile_many`` itself never raises for a
+        per-point failure and never drops a point: every
+        :class:`CompileResult` carries either a verdict or a typed
+        ``failure``.
         """
         cfg = config or self.config
         if grids is None:
@@ -409,13 +443,22 @@ class Toolchain:
         grid_list = [resolve_arch(g) for g in grids]
         sessions = [self._sibling(g, src) for g, src in zip(grid_list, grids)]
         programs = {k: self.program(k) for k in kernels}
-        points: List[PointKey] = [(k, gi) for k in kernels
-                                  for gi in range(len(grid_list))]
+        all_points: List[PointKey] = [(k, gi) for k in kernels
+                                      for gi in range(len(grid_list))]
+        if points is None:
+            points = all_points
+        else:
+            points = [(k, int(gi)) for k, gi in points]
+            bad = sorted(set(points) - set(all_points))
+            if bad:
+                raise ValueError(
+                    f"points outside the kernels x grids product: {bad}")
 
-        # resolve cache hits up front; only misses go to the pool
+        # resolve cache hits up front; only misses go to the fleet
         done: Dict[PointKey, CompileResult] = {}
         pending: List[PointKey] = []
         keys: Dict[PointKey, str] = {}
+        corrupt_notes: Dict[PointKey, Dict] = {}
         for pt in points:
             kernel, gi = pt
             tc = sessions[gi]
@@ -425,8 +468,13 @@ class Toolchain:
                 continue
             check = tc._oracle_check(prog)
             keys[pt] = tc._cache_key(prog, cfg, oracled=check is not None)
-            stored = self.cache.get(keys[pt])
+            stored, state = self._cache_lookup(keys[pt])
             if stored is None:
+                if state == "corrupt":
+                    corrupt_notes[pt] = failure_record(
+                        FailureKind.CACHE_CORRUPT, "cache",
+                        message=(f"quarantined corrupt cache entry for key "
+                                 f"{keys[pt][:12]}; re-solving"))
                 pending.append(pt)
                 continue
             res = MapResult.from_dict(prog.dfg, tc.grid, stored)
@@ -443,9 +491,11 @@ class Toolchain:
             )
             if res.mapping is None:
                 cr.status, cr.stage = res.status, "map"
-                done[pt] = cr
             else:
-                done[pt] = tc._finish(cr)
+                cr = tc._finish(cr)
+            done[pt] = cr
+            if on_result is not None:
+                on_result(pt, cr)
 
         if pending:
             cfg_dict = dataclasses.asdict(cfg)
@@ -457,42 +507,80 @@ class Toolchain:
                 # custom oracle: ship (tag, factory) to the workers; the
                 # factory must be picklable (module-level) for jobs > 1
                 oracle = (self.oracle_tag, self._oracle_factory)
-            tasks = [(k, grid_list[gi], cfg_dict, oracle)
-                     for k, gi in pending]
+            tasks = [MapTask(key=pt, kernel=pt[0], grid=grid_list[pt[1]],
+                             cfg=dict(cfg_dict), oracle=oracle)
+                     for pt in pending]
+
+            def handle(pt: PointKey, outcome: Dict) -> None:
+                cr = self._result_from_outcome(
+                    pt, outcome, sessions, programs, keys, corrupt_notes)
+                done[pt] = cr
+                if on_result is not None:
+                    on_result(pt, cr)
+
             n = jobs if jobs is not None else (os.cpu_count() or 1)
             n = max(1, min(n, len(tasks)))
             if n == 1:
-                outs = [_map_point(t) for t in tasks]
+                run_inline(tasks, resilience, on_outcome=handle)
             else:
-                with ProcessPoolExecutor(max_workers=n) as pool:
-                    outs = list(pool.map(_map_point, tasks))
-            for pt, out in zip(pending, outs):
-                kernel, gi = pt
-                tc = sessions[gi]
-                prog = programs[kernel]
-                cr = CompileResult(
-                    kernel=kernel,
-                    rows=tc.grid.spec.rows,
-                    cols=tc.grid.spec.cols,
-                    status="error",
-                    arch=tc.arch,
-                    program=prog,
-                    timings={"map": out["map_time_s"]},
-                )
-                if "error" in out:
-                    cr.stage, cr.error = "map", out["error"]
-                    done[pt] = cr
-                    continue
-                res = MapResult.from_dict(prog.dfg, tc.grid, out["result"])
-                cr.map_result = res
-                if self.cache is not None and res.status != "timeout":
-                    self.cache.put(keys[pt], out["result"])
-                if res.mapping is None:
-                    cr.status, cr.stage = res.status, "map"
-                    done[pt] = cr
-                else:
-                    done[pt] = tc._finish(cr)
+                run_supervised(tasks, jobs=n, rcfg=resilience,
+                               on_outcome=handle)
         return [done[pt] for pt in points]
+
+    def _cache_lookup(self, key: str):
+        """``(stored, state)`` — tolerates plain dict-like caches that
+        only implement ``get`` (state is then ``"miss"`` on ``None``)."""
+        lookup = getattr(self.cache, "lookup", None)
+        if lookup is not None:
+            return lookup(key)
+        stored = self.cache.get(key)
+        return stored, ("hit" if stored is not None else "miss")
+
+    def _result_from_outcome(
+        self,
+        pt: PointKey,
+        outcome: Dict,
+        sessions: List["Toolchain"],
+        programs: Dict[str, Program],
+        keys: Dict[PointKey, str],
+        corrupt_notes: Dict[PointKey, Dict],
+    ) -> CompileResult:
+        """One fleet outcome -> a finished :class:`CompileResult`, with
+        the parent-side cache write (terminal, non-degraded verdicts
+        only) and the post-map stages."""
+        kernel, gi = pt
+        tc = sessions[gi]
+        prog = programs[kernel]
+        cr = CompileResult(
+            kernel=kernel,
+            rows=tc.grid.spec.rows,
+            cols=tc.grid.spec.cols,
+            status="error",
+            arch=tc.arch,
+            program=prog,
+            timings={"map": outcome.get("map_time_s", 0.0)},
+        )
+        cr.retries = max(outcome.get("attempts", 1) - 1, 0)
+        cr.degraded = outcome.get("degraded")
+        cr.failure = outcome.get("failure") or corrupt_notes.get(pt)
+        if "result" not in outcome:
+            cr.status = "failed"
+            cr.stage = (cr.failure or {}).get("stage", "map")
+            cr.error = failure_text(cr.failure)
+            return cr
+        res = MapResult.from_dict(prog.dfg, tc.grid, outcome["result"])
+        cr.map_result = res
+        if (self.cache is not None and cr.degraded is None
+                and res.status in TERMINAL_MAP_STATUSES):
+            self.cache.put(keys[pt], outcome["result"])
+            spec = chaos.active()
+            if (spec is not None and spec.decide(
+                    kernel, _arch_key(tc.grid), 0) == "cache-corrupt"):
+                chaos.corrupt_file(self.cache._path(keys[pt]))
+        if res.mapping is None:
+            cr.status, cr.stage = res.status, "map"
+            return cr
+        return tc._finish(cr)
 
     def _sibling(self, grid: PEGrid, source: ArchLike = None) -> "Toolchain":
         """Same session settings over a different grid (shared cache).
@@ -508,23 +596,3 @@ class Toolchain:
         if source is not None and not isinstance(source, PEGrid):
             tc.arch = arch_label(source, grid)
         return tc
-
-
-def _map_point(task) -> Dict:
-    """Pool worker: one (kernel, grid) SAT mapping, oracle included.
-
-    Module-level (picklable) and self-contained: rebuilds the program
-    and MapperConfig from plain values (the grid — spec + capability
-    table — pickles directly), returns plain dicts.  The worker never
-    touches the on-disk cache — the parent owns it.
-    """
-    kernel, grid, cfg_dict, oracle = task
-    tc = Toolchain(grid, MapperConfig(**cfg_dict), oracle=oracle)
-    prog = tc.program(kernel)
-    t0 = time.monotonic()
-    try:
-        res, _ = tc._map_cached(prog)
-    except Exception as e:  # surfaced as a per-point "error" row
-        dt = time.monotonic() - t0
-        return {"error": format_error(e), "map_time_s": dt}
-    return {"result": res.to_dict(), "map_time_s": time.monotonic() - t0}

@@ -178,6 +178,73 @@ def test_cache_corrupt_entry_reads_as_miss(tmp_path):
     assert cache.get(key) is not None
 
 
+def test_cache_partial_write_is_quarantined_not_remissed(tmp_path):
+    """A torn entry must be *moved aside* (post-mortem evidence) and
+    counted, and a clean re-put must hit — not re-miss every sweep."""
+    cache = MappingCache(str(tmp_path / "c"))
+    key = "ab" + "0" * 62
+    cache.put(key, {"status": "mapped", "ii": 2})
+    path = cache._path(key)
+    data = open(path).read()
+    with open(path, "w") as fh:
+        fh.write(data[: len(data) // 2])  # a crash mid-write
+    stored, state = cache.lookup(key)
+    assert stored is None and state == "corrupt"
+    assert cache.stats()["corrupt"] == 1
+    qdir = os.path.join(cache.root, "quarantine")
+    assert os.path.isdir(qdir)
+    quarantined = os.listdir(qdir)
+    assert quarantined == [key + ".json.corrupt"]
+    assert len(cache) == 0  # quarantined entries are not entries
+    # a stale-schema entry is quarantined the same way
+    cache.put(key, {"status": "mapped", "ii": 2})
+    entry = json.load(open(path))
+    entry["schema"] = 99
+    with open(path, "w") as fh:
+        json.dump(entry, fh)
+    assert cache.lookup(key) == (None, "corrupt")
+    # the slot is free again: a clean re-put hits
+    cache.put(key, {"status": "mapped", "ii": 3})
+    stored, state = cache.lookup(key)
+    assert state == "hit" and stored["ii"] == 3
+
+
+def _cache_race_writer(root, key, result, n):
+    cache = MappingCache(root)
+    for _ in range(n):
+        cache.put(key, result)
+
+
+def test_cache_concurrent_writers_same_key(tmp_path):
+    """Processes racing put() on one key must both land complete entries
+    (atomic tempfile + os.replace): a reader interleaved with the race
+    never sees a torn file."""
+    import multiprocessing
+
+    root = str(tmp_path / "c")
+    key = "cd" + "1" * 62
+    result = {"status": "mapped", "ii": 4, "attempts": list(range(50))}
+    ctx = multiprocessing.get_context()
+    writers = [ctx.Process(target=_cache_race_writer,
+                           args=(root, key, result, 40))
+               for _ in range(4)]
+    for w in writers:
+        w.start()
+    reader = MappingCache(root)
+    while any(w.is_alive() for w in writers):
+        stored, state = reader.lookup(key)
+        assert state != "corrupt"  # never a torn read mid-race
+        if stored is not None:
+            assert stored == result  # complete payload or nothing
+    for w in writers:
+        w.join()
+        assert w.exitcode == 0
+    assert reader.lookup(key) == (result, "hit")
+    assert len(reader) == 1  # no stray temp files counted as entries
+    assert not [f for f in os.listdir(os.path.join(root, key[:2]))
+                if f.endswith(".tmp")]
+
+
 def test_op_counts_feed_dynamic_energy():
     from repro.cgra.bitstream import assemble
     from repro.cgra.energy import (OP_ENERGY, STATIC_PJ_PER_PE_CYCLE,

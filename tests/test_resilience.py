@@ -1,0 +1,385 @@
+"""Resilient compile fleet: chaos determinism, worker supervision
+(crash healing, parent-side deadline kills), the retry/degradation
+ladder, failure attribution, cache-poisoning protection, and
+crash-resumable sweeps.
+
+Faults are injected with the deterministic chaos harness
+(``repro.toolchain.chaos``), keyed off ``REPRO_CHAOS`` so forked workers
+and subprocess sweeps inherit the campaign with zero plumbing.  All
+solving runs on the dependency-free CDCL backend over 2x2/2x3 grids so
+the whole module stays inside tier-1 time budgets.
+"""
+import json
+import os
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.core import MapperConfig
+from repro.dse.journal import SweepJournal
+from repro.dse.sweep import SweepConfig, run_sweep
+from repro.toolchain import ResilienceConfig, Toolchain
+from repro.toolchain.chaos import ENV_KEY, ChaosSpec
+from repro.toolchain.resilience import (FailureKind, _classify_exitcode,
+                                        failure_record, failure_text)
+
+CDCL = MapperConfig(backend="cdcl", per_ii_timeout_s=10.0,
+                    total_timeout_s=30.0)
+
+SRC_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+
+
+def _has_z3():
+    try:
+        import z3  # noqa: F401
+        return True
+    except ImportError:
+        return False
+
+
+def _arm(monkeypatch, **kw):
+    spec = ChaosSpec(**kw)
+    monkeypatch.setenv(ENV_KEY, spec.to_json())
+    return spec
+
+
+# ---------------------------------------------------------------------------
+# chaos harness determinism
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_spec_env_round_trip():
+    spec = ChaosSpec(seed=7, rate=0.5, kinds=("crash", "hang"),
+                     attempts=(0, 1), hang_s=12.5, abort_after_points=3)
+    assert ChaosSpec.from_json(spec.to_json()) == spec
+
+
+def test_chaos_spec_rejects_unknown_fields_and_kinds():
+    with pytest.raises(ValueError, match="unknown ChaosSpec fields"):
+        ChaosSpec.from_json('{"rte": 0.5}')
+    with pytest.raises(ValueError, match="unknown chaos kinds"):
+        ChaosSpec.from_json('{"kinds": ["segfault"]}')
+
+
+def test_chaos_decide_is_deterministic_and_rate_bounded():
+    spec = ChaosSpec(seed=1, rate=0.3)
+    kernels = [f"k{i}" for i in range(200)]
+    first = [spec.decide(k, "2x2", 0) for k in kernels]
+    assert first == [spec.decide(k, "2x2", 0) for k in kernels]
+    hit_rate = sum(1 for d in first if d) / len(first)
+    assert 0.15 < hit_rate < 0.45  # ~rate, hash-derived
+    # ineligible attempts and other seeds decide independently
+    assert all(spec.decide(k, "2x2", 5) is None for k in kernels)
+    other = ChaosSpec(seed=2, rate=0.3)
+    assert [other.decide(k, "2x2", 0) for k in kernels] != first
+
+
+def test_backoff_is_deterministic_and_capped():
+    rcfg = ResilienceConfig(backoff_base_s=0.1, backoff_cap_s=0.4,
+                            jitter=0.5)
+    series = [rcfg.backoff_s("point", r) for r in range(6)]
+    assert series == [rcfg.backoff_s("point", r) for r in range(6)]
+    assert all(b <= 0.4 * 1.5 for b in series)
+    assert rcfg.backoff_s("other", 0) != series[0]
+
+
+def test_failure_record_and_text():
+    try:
+        raise ValueError("boom")
+    except ValueError as e:
+        rec = failure_record(FailureKind.SOLVER_ERROR, "map", e, attempt=2)
+    assert rec["kind"] == "solver-error" and rec["stage"] == "map"
+    assert rec["type"] == "ValueError" and rec["message"] == "boom"
+    assert rec["attempt"] == 2 and "ValueError: boom" in rec["traceback"]
+    assert failure_text(rec) == "ValueError: boom"
+    assert failure_text(None) is None
+
+
+def test_exitcode_classification():
+    import signal
+
+    assert _classify_exitcode(-signal.SIGKILL) == FailureKind.OOM
+    assert _classify_exitcode(-signal.SIGSEGV) == FailureKind.WORKER_CRASH
+    assert _classify_exitcode(1) == FailureKind.WORKER_CRASH
+    assert _classify_exitcode(None) == FailureKind.WORKER_CRASH
+
+
+# ---------------------------------------------------------------------------
+# supervision: crash healing and deadline kills (real worker processes)
+# ---------------------------------------------------------------------------
+
+
+def test_worker_crash_is_healed_and_retried(monkeypatch):
+    _arm(monkeypatch, rate=1.0, kinds=("crash",), attempts=(0,))
+    tc = Toolchain((2, 2), CDCL)
+    res = tc.compile_many(["bitcount", "reversebits"], grids=[(2, 2)],
+                          jobs=2)
+    for cr in res:
+        assert cr.status == "ok"
+        assert cr.retries == 1
+        assert cr.failure_kind == FailureKind.WORKER_CRASH
+        assert "exited with code" in cr.failure["message"]
+
+
+def test_hung_worker_is_killed_within_deadline(monkeypatch):
+    """The parent-side deadline must SIGKILL a wedged worker within 2x
+    the per-point budget and recycle the slot; the injected hang would
+    otherwise sleep for 60s."""
+    budget = 2.0
+    _arm(monkeypatch, rate=1.0, kinds=("hang",), attempts=(0,), hang_s=60.0)
+    rcfg = ResilienceConfig(deadline_factor=1.0, deadline_slack_s=0.5,
+                            max_retries=1)
+    cfg = MapperConfig(backend="cdcl", per_ii_timeout_s=1.0,
+                       total_timeout_s=budget)
+    tc = Toolchain((2, 2), cfg)
+    t0 = time.monotonic()
+    res = tc.compile_many(["bitcount", "reversebits"], grids=[(2, 2)],
+                          jobs=2, resilience=rcfg)
+    elapsed = time.monotonic() - t0
+    for cr in res:  # both slots hung in parallel; both killed + retried
+        assert cr.status == "ok"
+        assert cr.retries == 1
+        assert cr.failure_kind == FailureKind.DEADLINE
+        assert "deadline" in cr.failure["message"]
+    # deadline = 1.0*budget + 0.5s slack; generous pad for CI schedulers,
+    # but nowhere near the 60s hang
+    assert elapsed < 2 * budget + 3.0
+
+
+def test_fleet_matches_inline_results(monkeypatch):
+    """Chaos-free fleet and inline runs produce identical verdicts."""
+    monkeypatch.delenv(ENV_KEY, raising=False)
+    kernels = ["bitcount", "reversebits"]
+    tc = Toolchain((2, 2), CDCL)
+    inline = tc.compile_many(kernels, grids=[(2, 2), (2, 3)], jobs=1)
+    fleet = tc.compile_many(kernels, grids=[(2, 2), (2, 3)], jobs=2)
+    assert [(c.kernel, c.size, c.status, c.ii) for c in inline] == \
+        [(c.kernel, c.size, c.status, c.ii) for c in fleet]
+    assert all(c.retries == 0 and c.failure is None for c in fleet)
+
+
+# ---------------------------------------------------------------------------
+# the retry/degradation ladder
+# ---------------------------------------------------------------------------
+
+
+def test_persistent_fault_degrades_down_the_ladder(monkeypatch):
+    """Solver errors on attempts 0 and 1 exhaust max_retries=1; the
+    backend-flip rung is skipped (no z3 installed), so the point lands
+    on oracle-off and succeeds there."""
+    if "z3" in sys.modules or _has_z3():
+        pytest.skip("z3 installed: the ladder would flip backends first")
+    _arm(monkeypatch, rate=1.0, kinds=("solver-error",), attempts=(0, 1))
+    rcfg = ResilienceConfig(max_retries=1, backoff_base_s=0.01,
+                            backoff_cap_s=0.05)
+    tc = Toolchain((2, 2), CDCL)
+    for jobs in (1, 2):
+        (cr,) = tc.compile_many(["bitcount"], grids=[(2, 2)], jobs=jobs,
+                                resilience=rcfg)
+        assert cr.status == "ok"
+        assert cr.degraded == "oracle-off"
+        assert cr.retries == 2
+        assert cr.failure_kind == FailureKind.SOLVER_ERROR
+
+
+def test_exhausted_ladder_yields_typed_failed_row(monkeypatch):
+    """A fault that survives every rung terminates as a typed
+    ``status="failed"`` result — never an exception out of
+    ``compile_many``, never a lost point."""
+    _arm(monkeypatch, rate=1.0, kinds=("solver-error",),
+         attempts=tuple(range(12)))
+    rcfg = ResilienceConfig(max_retries=1, backoff_base_s=0.01,
+                            backoff_cap_s=0.05)
+    tc = Toolchain((2, 2), CDCL)
+    for jobs in (1, 2):
+        (cr,) = tc.compile_many(["bitcount"], grids=[(2, 2)], jobs=jobs,
+                                resilience=rcfg)
+        assert cr.status == "failed"
+        assert cr.stage == "map"
+        assert cr.failure_kind == FailureKind.SOLVER_ERROR
+        assert cr.failure["type"] == "ChaosError"
+        assert "traceback" in cr.failure
+        assert cr.error and "ChaosError" in cr.error
+
+
+def test_degraded_results_are_not_cached(tmp_path, monkeypatch):
+    _arm(monkeypatch, rate=1.0, kinds=("solver-error",), attempts=(0, 1))
+    rcfg = ResilienceConfig(max_retries=1, backoff_base_s=0.01,
+                            backoff_cap_s=0.05)
+    tc = Toolchain((2, 2), CDCL, cache=str(tmp_path / "cache"))
+    (cr,) = tc.compile_many(["bitcount"], grids=[(2, 2)], jobs=1,
+                            resilience=rcfg)
+    assert cr.status == "ok" and cr.degraded == "oracle-off"
+    assert len(tc.cache) == 0  # a rung result must not poison the key
+
+
+# ---------------------------------------------------------------------------
+# cache-poisoning protection (satellite: only terminal verdicts cached)
+# ---------------------------------------------------------------------------
+
+
+def test_transient_failure_is_not_cached_and_retried_next_sweep(
+        tmp_path, monkeypatch):
+    """A point that fails this sweep (injected transient solver error,
+    ladder disabled) must be re-attempted — and succeed — on the next
+    sweep instead of replaying a poisoned cache entry."""
+    _arm(monkeypatch, rate=1.0, kinds=("solver-error",),
+         attempts=tuple(range(12)))
+    rcfg = ResilienceConfig(max_retries=0, degradation=())
+    tc = Toolchain((2, 2), CDCL, cache=str(tmp_path / "cache"))
+    (cr,) = tc.compile_many(["bitcount"], grids=[(2, 2)], jobs=1,
+                            resilience=rcfg)
+    assert cr.status == "failed"
+    assert len(tc.cache) == 0  # the failure never reached the cache
+
+    monkeypatch.delenv(ENV_KEY)
+    (cr2,) = tc.compile_many(["bitcount"], grids=[(2, 2)], jobs=1,
+                             resilience=rcfg)
+    assert cr2.status == "ok" and not cr2.cache_hit  # genuinely re-solved
+    assert len(tc.cache) == 1
+    (cr3,) = tc.compile_many(["bitcount"], grids=[(2, 2)], jobs=1)
+    assert cr3.status == "ok" and cr3.cache_hit
+
+
+def test_corrupted_cache_entry_is_quarantined_and_attributed(
+        tmp_path, monkeypatch):
+    """The chaos cache-corrupt fault tears the entry right after the
+    parent writes it; the next sweep must quarantine it, re-solve, and
+    attribute the loss as ``cache-corrupt`` — not silently re-miss."""
+    _arm(monkeypatch, rate=1.0, kinds=("cache-corrupt",), attempts=(0,))
+    tc = Toolchain((2, 2), CDCL, cache=str(tmp_path / "cache"))
+    (cr,) = tc.compile_many(["bitcount"], grids=[(2, 2)], jobs=1)
+    assert cr.status == "ok"  # the solve itself is unaffected
+
+    (cr2,) = tc.compile_many(["bitcount"], grids=[(2, 2)], jobs=1)
+    assert cr2.status == "ok" and not cr2.cache_hit
+    assert cr2.failure_kind == FailureKind.CACHE_CORRUPT
+    assert tc.cache.stats()["corrupt"] == 1
+    qdir = tmp_path / "cache" / "quarantine"
+    assert qdir.is_dir() and len(list(qdir.iterdir())) == 1
+
+
+# ---------------------------------------------------------------------------
+# compile_many subset + completion-callback API (the journal hooks)
+# ---------------------------------------------------------------------------
+
+
+def test_compile_many_points_subset_and_on_result(monkeypatch):
+    monkeypatch.delenv(ENV_KEY, raising=False)
+    tc = Toolchain((2, 2), CDCL)
+    seen = []
+    res = tc.compile_many(["bitcount", "reversebits"],
+                          grids=[(2, 2), (2, 3)], jobs=1,
+                          points=[("bitcount", 1), ("reversebits", 0)],
+                          on_result=lambda pt, cr: seen.append(pt))
+    assert [(c.kernel, c.size) for c in res] == \
+        [("bitcount", "2x3"), ("reversebits", "2x2")]
+    assert sorted(seen) == [("bitcount", 1), ("reversebits", 0)]
+    with pytest.raises(ValueError, match="outside the kernels x grids"):
+        tc.compile_many(["bitcount"], grids=[(2, 2)], points=[("nope", 0)])
+
+
+# ---------------------------------------------------------------------------
+# the sweep journal
+# ---------------------------------------------------------------------------
+
+
+def test_journal_round_trip_torn_tail_and_signature_mismatch(tmp_path):
+    path = str(tmp_path / "j.jsonl")
+    sig = {"kernels": ["a"], "backend": "cdcl"}
+    j = SweepJournal(path)
+    assert j.start(sig, resume=True) == {}  # no file yet -> fresh header
+    j.record("a", "2x2", {"status": "mapped", "ii": 2})
+    j.record("a", "2x3", {"status": "mapped", "ii": 3})
+    j.record("a", "2x2", {"status": "mapped", "ii": 9})  # last wins
+    j.close()
+    with open(path, "a") as fh:
+        fh.write('{"kernel": "a", "size": "3x3", "row": {"status"')  # torn
+    done = SweepJournal(path).load(sig)
+    assert done == {("a", "2x2"): {"status": "mapped", "ii": 9},
+                    ("a", "2x3"): {"status": "mapped", "ii": 3}}
+    # a different signature must not resume someone else's sweep
+    assert SweepJournal(path).load({"kernels": ["b"]}) == {}
+    j2 = SweepJournal(path)
+    assert j2.start({"kernels": ["b"]}, resume=True) == {}  # rewritten
+    j2.close()
+    assert SweepJournal(path).load(sig) == {}
+
+
+def test_sweep_journal_and_resume_skip_completed_points(tmp_path):
+    cfg = SweepConfig(kernels=["bitcount", "reversebits"],
+                      sizes=[(2, 2), (2, 3)], backend="cdcl",
+                      per_point_timeout_s=30.0, per_ii_timeout_s=10.0,
+                      jobs=1, cache_dir=None,
+                      journal_path=str(tmp_path / "j.jsonl"))
+    first = run_sweep(cfg)
+    assert "resumed_points" not in first
+    assert sum(1 for _ in open(cfg.journal_path)) == 5  # header + 4 rows
+    # resume replays everything: no compile work, identical rows
+    second = run_sweep(cfg, resume=True)
+    assert second["resumed_points"] == 4
+    assert second["points"] == first["points"]
+
+
+def _projection(doc):
+    keys = ("kernel", "size", "status", "ii", "utilization",
+            "latency_cycles", "energy_nj", "cegar_rounds")
+    return [{k: r.get(k) for k in keys} for r in doc["points"]]
+
+
+def test_sweep_survives_chaos_kill_and_resumes_byte_identical(tmp_path):
+    """The acceptance path: a chaotic sweep is hard-killed mid-run
+    (``abort_after_points``), then ``--resume`` completes it; the
+    correctness projection must equal a fault-free sweep's."""
+    env_base = dict(os.environ, PYTHONPATH=SRC_DIR)
+    env_base.pop(ENV_KEY, None)
+    out = tmp_path / "dse.json"
+    base_out = tmp_path / "base.json"
+    args = [sys.executable, "-m", "repro.dse",
+            "--kernels", "bitcount,reversebits", "--sizes", "2x2,2x3",
+            "--backend", "cdcl", "--jobs", "2", "--timeout", "10"]
+
+    # fault-free reference (its own cache so nothing is shared)
+    p = subprocess.run(
+        args + ["--cache-dir", str(tmp_path / "cache_base"),
+                "--out", str(base_out), "--no-journal"],
+        env=env_base, capture_output=True, text=True, timeout=120)
+    assert p.returncode == 0, p.stderr
+    args += ["--cache-dir", str(tmp_path / "cache")]
+
+    # chaotic run, killed after 2 completed points
+    chaos_env = dict(env_base)
+    chaos_env[ENV_KEY] = json.dumps(
+        {"seed": 3, "rate": 0.3, "abort_after_points": 2})
+    p = subprocess.run(args + ["--out", str(out)], env=chaos_env,
+                       capture_output=True, text=True, timeout=120)
+    assert p.returncode == 23, (p.returncode, p.stderr)  # the chaos kill
+    assert not out.exists()  # died before emitting the document
+    journal = tmp_path / ".sweep_journal.jsonl"
+    assert journal.exists()
+    assert sum(1 for _ in open(journal)) == 3  # header + 2 durable rows
+
+    # resume under the same chaos seed (minus the abort): completes and
+    # converges to the fault-free answer
+    chaos_env[ENV_KEY] = json.dumps({"seed": 3, "rate": 0.3})
+    p = subprocess.run(args + ["--out", str(out), "--resume"],
+                       env=chaos_env, capture_output=True, text=True,
+                       timeout=120)
+    assert p.returncode == 0, p.stderr
+    doc = json.load(open(out))
+    assert doc["resumed_points"] == 2
+    assert doc["errors"] == 0
+    base = json.load(open(base_out))
+    assert _projection(doc) == _projection(base)
+
+
+def test_cli_rejects_bad_chaos_spec():
+    from repro.dse.cli import main as dse_main
+
+    with pytest.raises(SystemExit):
+        dse_main(["--chaos", '{"rate": "not json'])
+    with pytest.raises(SystemExit):
+        dse_main(["--chaos", '{"kinds": ["segfault"]}'])
