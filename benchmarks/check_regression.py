@@ -6,6 +6,11 @@ Three artifact shapes are understood:
 
 * ``benchmarks/incremental_solver.py`` row lists — rows are joined on
   (cil, size, backend);
+* ``benchmarks/portfolio.py`` row lists (``bench: "portfolio"``) — rows
+  are joined on (cil, size, strategy); committed II, II-equality with
+  the sequential ladder and the summary's ``all_same_ii`` flag are hard
+  (the racer's determinism contract), the three wall-time columns are
+  tolerance-gated;
 * ``repro.dse`` sweep documents — points are joined on (kernel, size)
   and the whole Pareto section must match exactly;
 * ``benchmarks/arch_dse.py`` documents (``bench: "arch_dse"``) — points
@@ -41,6 +46,10 @@ from typing import Dict, List, Tuple
 
 INC_HARD = ("status", "ii", "same_result", "all_same_result")
 INC_TIME = ("cold_s", "incremental_s")
+# geomean speedups are wall-time-derived, so only the determinism flags
+# and the committed IIs are hard for the portfolio lane
+PORT_HARD = ("status", "ii", "ii_sequential", "same_ii", "all_same_ii")
+PORT_TIME = ("cold_s", "incremental_s", "portfolio_s")
 DSE_HARD = ("status", "ii", "utilization", "latency_cycles", "energy_nj",
             "cegar_rounds")
 DSE_TIME = ("map_time_s",)
@@ -103,6 +112,27 @@ def check_incremental(cur: List[Dict], base: List[Dict], gate: Gate) -> None:
             if f in b:
                 gate.hard(where, f, c.get(f), b.get(f))
         for f in INC_TIME:
+            if f in b:
+                gate.timed(where, f, c.get(f), b.get(f))
+
+
+def check_portfolio(cur: List[Dict], base: List[Dict], gate: Gate) -> None:
+    def ix(rows):
+        return {(r.get("cil"), r.get("size"), r.get("strategy")): r
+                for r in rows}
+    cur_ix, base_ix = ix(cur), ix(base)
+    missing = sorted(set(map(str, base_ix)) - set(map(str, cur_ix)))
+    if missing:
+        gate.errors.append(f"portfolio: rows missing: {missing}")
+    for key, b in base_ix.items():
+        c = cur_ix.get(key)
+        if c is None:
+            continue
+        where = "portfolio" + str(key)
+        for f in PORT_HARD:
+            if f in b:
+                gate.hard(where, f, c.get(f), b.get(f))
+        for f in PORT_TIME:
             if f in b:
                 gate.timed(where, f, c.get(f), b.get(f))
 
@@ -192,6 +222,14 @@ def correctness_projection(doc) -> bytes:
         }
     elif isinstance(doc, dict) and doc.get("bench") == "toolchain_map":
         stable = {k: doc.get(k) for k in TOOLMAP_HARD}
+    elif (isinstance(doc, list) and doc
+          and doc[0].get("bench") == "portfolio"):
+        stable = sorted(
+            ({k: r.get(k)
+              for k in ("cil", "size", "strategy") + PORT_HARD if k in r}
+             for r in doc),
+            key=lambda r: (str(r.get("cil")), str(r.get("size")),
+                           str(r.get("strategy"))))
     elif isinstance(doc, list):
         stable = sorted(
             ({k: r.get(k)
@@ -233,6 +271,9 @@ def main(argv=None) -> int:
         check_arch_dse(cur, base, gate)
     elif isinstance(base, dict) and base.get("bench") == "toolchain_map":
         check_toolchain_map(cur, base, gate)
+    elif (isinstance(base, list) and base
+          and base[0].get("bench") == "portfolio"):
+        check_portfolio(cur, base, gate)
     elif isinstance(base, list):
         check_incremental(cur, base, gate)
     else:

@@ -1,0 +1,174 @@
+"""Portfolio racer vs cold vs incremental mapping: the PR-7 perf lane.
+
+For each benchmark CIL the mapper runs three ways through a
+``repro.toolchain`` session (bitstream assembler as CEGAR oracle):
+
+* **cold** — ``incremental=False``: every CEGAR round rebuilds the KMS
+  encoding and cold-starts the solver (pre-incremental behavior);
+* **incremental** — ``incremental=True``: one persistent solver session
+  per II, blocking clauses appended warm (the PR-1 engine);
+* **portfolio** — the PR-7 racer behind ``--strategy``: independent
+  solver strategies race each II rung with speculative II/II+1 launch,
+  first decisive verdict wins, losers cancelled cooperatively.
+
+The pinned roster ``cdcl-seq + cdcl-pair`` is dependency-free, so the
+lane runs identically with or without the z3 extra.  The default
+``--jobs 1`` races inline (primary strategy first — the deterministic
+degradation of the fleet race), which makes the portfolio column an
+honest superset of the incremental engine rather than a measurement of
+this box's core count; ``--jobs N`` ablates the forked race.
+
+Emits one ``BENCH {json}`` line per (cil, grid) with all three wall
+times, the portfolio-vs-cold and portfolio-vs-incremental speedups and
+the race telemetry, plus a geomean summary row (overall and restricted
+to CEGAR-active kernels, where cancelled re-solves are there to win).
+``same_ii`` / ``all_same_ii`` assert the racer's determinism contract:
+the committed II must equal the sequential ladder's on every case.
+Feeds EXPERIMENTS.md §Portfolio.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import time
+from typing import Dict, List, Optional
+
+from repro.core import MapperConfig
+from repro.toolchain import Toolchain
+
+PORTFOLIO_SPEC = "portfolio:cdcl-seq+cdcl-pair,spec_ii=2"
+
+# same coverage as the incremental lane: gsm@2x2 is CEGAR-active (the
+# assembler rejects its first mapping with a prologue clobber), the rest
+# exercise the plain II sweep.
+CASES = [
+    ("bitcount", (2, 2)),
+    ("reversebits", (2, 2)),
+    ("gsm", (2, 2)),
+    ("gsm", (3, 3)),
+    ("stringsearch", (2, 2)),
+    ("stringsearch", (3, 3)),
+    ("sqrt", (3, 3)),
+]
+
+SMOKE_CASES = [("bitcount", (2, 2)), ("gsm", (2, 2))]  # CI smoke subset
+
+
+def _run_once(name: str, size, cfg: MapperConfig,
+              jobs: Optional[int] = None) -> Dict:
+    tc = Toolchain(tuple(size), cfg)
+    prog = tc.program(name)
+    t0 = time.monotonic()
+    res = tc.map(prog, jobs=jobs)
+    dt = time.monotonic() - t0
+    return {
+        "status": res.status, "ii": res.ii, "time_s": dt,
+        "attempts": len(res.attempts),
+        "encodings_built": res.encodings_built,
+        "incremental_solves": res.incremental_solves,
+        "cegar_rounds": res.cegar_rounds,
+        "strategies_raced": res.strategies_raced,
+        "winner": res.winner,
+        "cancelled_after_s": res.cancelled_after_s,
+    }
+
+
+def _geomean(xs: List[float]) -> Optional[float]:
+    xs = [x for x in xs if x > 0]
+    if not xs:
+        return None
+    return math.exp(sum(math.log(x) for x in xs) / len(xs))
+
+
+def run(per_ii_timeout: float = 20.0, total_timeout: float = 40.0,
+        repeats: int = 3, cases=None, jobs: Optional[int] = 1,
+        strategy: str = PORTFOLIO_SPEC) -> List[Dict]:
+    rows: List[Dict] = []
+    for name, size in (cases or CASES):
+        base = MapperConfig.for_bench(backend="cdcl",
+                                      per_ii_timeout_s=per_ii_timeout,
+                                      total_timeout_s=total_timeout)
+        best: Dict[str, Dict] = {}
+        for mode, cfg in (
+            ("cold", dataclasses.replace(base, incremental=False)),
+            ("incremental", dataclasses.replace(base, incremental=True)),
+            ("portfolio", dataclasses.replace(base, backend="auto",
+                                              strategy=strategy)),
+        ):
+            mode_jobs = jobs if mode == "portfolio" else None
+            runs = [_run_once(name, size, cfg, jobs=mode_jobs)
+                    for _ in range(repeats)]
+            best[mode] = min(runs, key=lambda r: r["time_s"])
+        cold, incr, port = (best["cold"], best["incremental"],
+                            best["portfolio"])
+        same = (port["status"] == incr["status"]
+                and port["ii"] == incr["ii"] == cold["ii"])
+        speedup = (cold["time_s"] / port["time_s"]
+                   if port["time_s"] > 0 else None)
+        vs_incr = (incr["time_s"] / port["time_s"]
+                   if port["time_s"] > 0 else None)
+        row = {
+            "bench": "portfolio", "cil": name,
+            "size": f"{size[0]}x{size[1]}", "strategy": strategy,
+            "status": port["status"], "ii": port["ii"],
+            "ii_sequential": incr["ii"], "same_ii": same,
+            "cold_s": round(cold["time_s"], 4),
+            "incremental_s": round(incr["time_s"], 4),
+            "portfolio_s": round(port["time_s"], 4),
+            "speedup": round(speedup, 3) if speedup else None,
+            "speedup_vs_incremental": (round(vs_incr, 3)
+                                       if vs_incr else None),
+            "cegar_rounds": port["cegar_rounds"],
+            "encodings_built": port["encodings_built"],
+            "incremental_solves": port["incremental_solves"],
+            "strategies_raced": port["strategies_raced"],
+            "winner": port["winner"],
+        }
+        rows.append(row)
+        print("BENCH", json.dumps(row), flush=True)
+    brows = [r for r in rows if r["speedup"]]
+    active = [r for r in brows if r["cegar_rounds"] > 0]
+    overall = _geomean([r["speedup"] for r in brows])
+    active_g = _geomean([r["speedup"] for r in active])
+    summary = {
+        "bench": "portfolio", "cil": "geomean", "strategy": strategy,
+        # None (not 0.0) when there is nothing to aggregate
+        "geomean_speedup": round(overall, 3) if overall else None,
+        "geomean_speedup_cegar_active": (round(active_g, 3)
+                                         if active_g else None),
+        "cegar_active_cases": len(active),
+        "all_same_ii": all(r["same_ii"] for r in rows if "same_ii" in r),
+    }
+    rows.append(summary)
+    print("BENCH", json.dumps(summary), flush=True)
+    return rows
+
+
+def main(out="results/BENCH_portfolio.json", smoke=False,
+         jobs: Optional[int] = 1):
+    rows = run(cases=SMOKE_CASES if smoke else None,
+               repeats=1 if smoke else 3, jobs=jobs)
+    import os
+    os.makedirs(os.path.dirname(out) or ".", exist_ok=True)
+    with open(out, "w") as fh:
+        json.dump(rows, fh, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    import argparse
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true")
+    # smoke writes its own artifact so it never clobbers the committed
+    # full-sweep baseline the CI regression gate compares against
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--jobs", type=int, default=1,
+                    help="race worker processes (1 = deterministic "
+                         "inline race, the committed-baseline mode)")
+    args = ap.parse_args()
+    out = args.out or ("results/portfolio_smoke.json"
+                       if args.smoke else "results/BENCH_portfolio.json")
+    rows = main(out=out, smoke=args.smoke, jobs=args.jobs)
+    bad = [r for r in rows if r.get("same_ii") is False]
+    assert not bad, f"portfolio/sequential II mismatch: {bad}"

@@ -94,6 +94,15 @@ def main() -> int:
             return out
         rows.append((name, dt, "speedup:" + ";".join(map(_fmt, summaries))))
 
+    def lane_portfolio():
+        from . import portfolio
+        name, dt, prows = _run("portfolio", portfolio.main)
+        summary = next(r for r in prows if r.get("cil") == "geomean")
+        derived = (f"speedup={summary['geomean_speedup']}x"
+                   f"(cegar={summary['geomean_speedup_cegar_active']}x);"
+                   f"same_ii={summary['all_same_ii']}")
+        rows.append((name, dt, derived))
+
     def lane_dse():
         from repro.dse.cli import run_smoke
         name, dt, doc = _run("dse", run_smoke)
@@ -139,6 +148,7 @@ def main() -> int:
     lane("table7_8", lane_table7_8)
     lane("solver_opts", lane_solver_opts)
     lane("incremental_solver", lane_incremental)
+    lane("portfolio", lane_portfolio)
     lane("dse", lane_dse)
     lane("arch_dse", lane_arch_dse)
     lane("frontend_cosim", lane_frontend)

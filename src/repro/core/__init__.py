@@ -4,11 +4,13 @@ from .schedule import (KMS, MobilitySchedule, Slot, asap_alap, fold_kms,
                        kms_ii_upper_bound)
 from .mii import min_ii, rec_ii, res_ii
 from .sat_encoding import EncodingBudgetExceeded, KMSEncoding
-from .backends import (CDCLSession, SolverSession, Z3Session, make_session,
-                       resolve_backend)
+from .backends import (CDCLSession, PortfolioSpec, SolverSession, Strategy,
+                       Z3Session, make_session, parse_portfolio,
+                       parse_strategy, resolve_backend)
+from .facts import FactStore
 from .mapping import Mapping, Placement, validate_mapping
-from .mapper import (IIAttempt, MapperConfig, MapResult, map_dfg,
-                     map_dfg_cached, mapping_cache_key)
+from .mapper import (IIAttempt, IIOutcome, MapperConfig, MapResult,
+                     attempt_ii, map_dfg, map_dfg_cached, mapping_cache_key)
 from .baseline_ims import HeuristicConfig, map_dfg_heuristic
 from .regalloc import allocate_registers
 
@@ -20,9 +22,11 @@ __all__ = [
     "KMSEncoding", "EncodingBudgetExceeded",
     "SolverSession", "CDCLSession", "Z3Session", "make_session",
     "resolve_backend",
+    "Strategy", "PortfolioSpec", "parse_strategy", "parse_portfolio",
+    "FactStore",
     "Mapping", "Placement", "validate_mapping",
-    "MapperConfig", "MapResult", "IIAttempt", "map_dfg",
-    "map_dfg_cached", "mapping_cache_key",
+    "MapperConfig", "MapResult", "IIAttempt", "IIOutcome", "attempt_ii",
+    "map_dfg", "map_dfg_cached", "mapping_cache_key",
     "HeuristicConfig", "map_dfg_heuristic",
     "allocate_registers",
 ]

@@ -16,6 +16,15 @@ baseline.
 exploration per II, advancing on timeout).  ``total_timeout_s`` covers
 Python-side encoding/CNF construction too (via a deadline threaded into
 :class:`KMSEncoding`), not just solver time.
+
+The per-II search lives in :func:`attempt_ii` — one (II, strategy) CEGAR
+loop returning a typed :class:`IIOutcome` — consumed by both the
+sequential ladder here and the portfolio racer
+(:mod:`repro.core.portfolio`).  A :class:`MapperConfig` with a
+``strategy`` spec that races multiple strategies or speculates on the II
+ladder dispatches to the racer; the legacy ``backend``/``amo`` pair (and
+any single sequential strategy) stays on the sequential path, bit-for-bit
+compatible with every prior release.
 """
 from __future__ import annotations
 
@@ -24,16 +33,17 @@ import hashlib
 import json
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Sequence
 
 from ..cgra.arch import PEGrid
-from .backends import make_session, resolve_backend
+from .backends import (PortfolioSpec, Strategy, make_session,
+                       resolve_backend, resolve_portfolio)
 from .dfg import DFG
 from .mapping import Mapping, Placement, classify_handoff, validate_mapping
 from .mii import min_ii
 from .regalloc import allocate_registers
 from .sat_encoding import EncodingBudgetExceeded, KMSEncoding
-from .schedule import asap_alap, fold_kms
+from .schedule import Slot, asap_alap, fold_kms
 
 
 @dataclass
@@ -49,6 +59,23 @@ class MapperConfig:
     validate: bool = True
     max_cegar_rounds: int = 25     # blocking-clause refinements per II
     incremental: bool = True       # False: cold-rebuild per CEGAR round
+    #: compact strategy/portfolio spec (``repro.core.backends`` grammar,
+    #: e.g. ``"portfolio:cdcl-seq+z3-atmost,spec_ii=2"``).  ``None`` keeps
+    #: the legacy ``backend``/``amo`` pair authoritative (deprecation
+    #: shim); setting both raises in :func:`resolve_portfolio`.
+    strategy: Optional[str] = None
+
+    def __post_init__(self):
+        # accept typed Strategy/PortfolioSpec objects and normalize to the
+        # compact string so asdict()/pickle/cache keys stay plain data
+        if isinstance(self.strategy, Strategy):
+            self.strategy = PortfolioSpec((self.strategy,)).to_compact()
+        elif isinstance(self.strategy, PortfolioSpec):
+            self.strategy = self.strategy.to_compact()
+
+    def portfolio(self) -> PortfolioSpec:
+        """The resolved strategy roster (legacy pair -> single strategy)."""
+        return resolve_portfolio(self.strategy, self.backend, self.amo)
 
     @classmethod
     def for_bench(cls, backend: str = "auto",
@@ -80,6 +107,18 @@ class IIAttempt:
     incremental: bool = False      # solved on a warm session
 
 
+def combos_to_jsonable(combos: Sequence) -> List:
+    """Placement-triple combos -> plain lists (cache / pickle payloads)."""
+    return [[[n, p, [slot.c, slot.it]] for (n, p, slot) in combo]
+            for combo in combos]
+
+
+def combos_from_jsonable(data: Sequence) -> List:
+    """Inverse of :func:`combos_to_jsonable` (revives the Slots)."""
+    return [[(n, p, Slot(sc, sit)) for (n, p, (sc, sit)) in combo]
+            for combo in data]
+
+
 @dataclass
 class MapResult:
     mapping: Optional[Mapping]
@@ -92,6 +131,15 @@ class MapResult:
     encodings_built: int = 0         # KMSEncoding constructions
     incremental_solves: int = 0      # solves that reused a live session
     cegar_rounds: int = 0            # blocking clauses fed back by the oracle
+    # -- portfolio telemetry (defaults on the sequential path, so every
+    # -- serialized form below stays byte-identical unless a race ran) ------
+    strategies_raced: int = 0        # (ii, strategy) tasks launched
+    winner: str = ""                 # strategy name that produced `mapping`
+    cancelled_after_s: Optional[float] = None  # race start -> losers cancelled
+    # -- provable facts for cross-point lifting (repro.core.facts) ----------
+    blocked_combos: List = field(default_factory=list)  # oracle combos found
+    unsat_iis: List[int] = field(default_factory=list)  # solver-proven UNSAT
+    facts_used: int = 0              # lifted facts seeded into this solve
 
     @property
     def ii(self) -> Optional[int]:
@@ -112,6 +160,21 @@ class MapResult:
             "attempts": [dataclasses.asdict(a) for a in self.attempts],
             "mapping": self.mapping.to_dict() if self.mapping else None,
         }
+        # new fields are emitted only when non-default: cache entries and
+        # digests from sequential runs stay byte-identical to every
+        # pre-portfolio release
+        if self.strategies_raced:
+            d["strategies_raced"] = self.strategies_raced
+        if self.winner:
+            d["winner"] = self.winner
+        if self.cancelled_after_s is not None:
+            d["cancelled_after_s"] = self.cancelled_after_s
+        if self.blocked_combos:
+            d["blocked_combos"] = combos_to_jsonable(self.blocked_combos)
+        if self.unsat_iis:
+            d["unsat_iis"] = list(self.unsat_iis)
+        if self.facts_used:
+            d["facts_used"] = self.facts_used
         return d
 
     @classmethod
@@ -126,7 +189,13 @@ class MapResult:
             backend=d.get("backend", ""),
             encodings_built=d.get("encodings_built", 0),
             incremental_solves=d.get("incremental_solves", 0),
-            cegar_rounds=d.get("cegar_rounds", 0))
+            cegar_rounds=d.get("cegar_rounds", 0),
+            strategies_raced=d.get("strategies_raced", 0),
+            winner=d.get("winner", ""),
+            cancelled_after_s=d.get("cancelled_after_s"),
+            blocked_combos=combos_from_jsonable(d.get("blocked_combos", [])),
+            unsat_iis=list(d.get("unsat_iis", [])),
+            facts_used=d.get("facts_used", 0))
 
 
 def _extract_mapping(dfg: DFG, grid: PEGrid, kms, enc: KMSEncoding,
@@ -142,16 +211,173 @@ def _extract_mapping(dfg: DFG, grid: PEGrid, kms, enc: KMSEncoding,
     return mapping
 
 
+@dataclass
+class IIOutcome:
+    """The typed verdict of one (II, strategy) CEGAR search.
+
+    ``verdict`` is one of
+
+    * ``"mapped"``      — a validated (and oracle-clean) mapping at this II;
+    * ``"advance"``     — this II is done, bump the ladder (solver UNSAT,
+      RA failure, CEGAR-round exhaustion, an unblockable counterexample,
+      or a per-II timeout under ``on_timeout="advance"``);
+    * ``"timeout"``     — the total budget died here (terminal);
+    * ``"interrupted"`` — a cooperative cancellation (``stop``) landed;
+      the II is *undecided* (racers treat it like a worker loss).
+
+    ``proven_unsat`` marks an ``"advance"`` that the solver actually
+    proved (a liftable fact), as opposed to the heuristic advances above.
+    ``new_blocked`` carries the CEGAR counterexamples discovered here so
+    callers can extend their shared pool.
+    """
+
+    ii: int
+    verdict: str
+    mapping: Optional[Mapping] = None
+    attempts: List[IIAttempt] = field(default_factory=list)
+    encodings_built: int = 0
+    incremental_solves: int = 0
+    cegar_rounds: int = 0
+    new_blocked: List = field(default_factory=list)
+    validation_errors: List[str] = field(default_factory=list)
+    proven_unsat: bool = False
+
+
+def attempt_ii(dfg: DFG, grid: PEGrid, ms, ii: int, cfg: MapperConfig,
+               strategy: Strategy, blocked: Sequence,
+               assemble_check=None, deadline: Optional[float] = None,
+               stop: Optional[Callable[[], bool]] = None) -> IIOutcome:
+    """One II, one strategy: encode, solve, CEGAR-refine.  The reusable
+    inner loop of the paper's Fig. 4 ladder — the sequential
+    :func:`map_dfg` walks it over II = mII, mII+1, ... while the
+    portfolio racer (:mod:`repro.core.portfolio`) runs many instances
+    concurrently.  ``blocked`` is the caller's counterexample pool (not
+    mutated; discoveries come back in ``IIOutcome.new_blocked``)."""
+    out = IIOutcome(ii=ii, verdict="advance")
+    kms = fold_kms(ms, ii)
+    pool = list(blocked)
+    enc: Optional[KMSEncoding] = None
+    session = None
+    new_clause = None
+    for _cegar in range(max(cfg.max_cegar_rounds, 1)):
+        t_enc = time.monotonic()
+        try:
+            if enc is None or not cfg.incremental:
+                enc = KMSEncoding(dfg, kms, grid,
+                                  symmetry_break=cfg.symmetry_break,
+                                  blocked_combinations=pool,
+                                  deadline=deadline)
+                session = strategy.session(enc, deadline=deadline)
+                out.encodings_built += 1
+            elif new_clause is not None:
+                # within a CEGAR loop only the new blocking clause
+                # reaches the live solver
+                session.add_clause(new_clause)
+        except EncodingBudgetExceeded:
+            out.verdict = "timeout"
+            return out
+        encode_time = time.monotonic() - t_enc
+        new_clause = None
+        budget = cfg.per_ii_timeout_s
+        if deadline is not None:
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                out.verdict = "timeout"
+                return out
+            budget = min(budget, remaining) if budget else remaining
+        status, model, stats = session.solve(timeout_s=budget, stop=stop)
+        attempt = IIAttempt(ii=ii, status=status, time_s=stats.time_s,
+                            num_vars=stats.num_vars,
+                            num_clauses=stats.num_clauses,
+                            encode_time_s=encode_time,
+                            incremental=stats.incremental)
+        out.attempts.append(attempt)
+        if stats.incremental:
+            out.incremental_solves += 1
+        if status == "sat":
+            mapping = _extract_mapping(dfg, grid, kms, enc, model)
+            ra = allocate_registers(mapping)
+            attempt.ra_ok = ra.ok
+            if not ra.ok:
+                return out  # RA failure: paper increments II, re-searches
+            if cfg.validate:
+                errs = validate_mapping(mapping, kms=kms)
+                out.validation_errors = errs
+                if errs:
+                    raise AssertionError(
+                        f"solver returned invalid mapping at II={ii}: "
+                        f"{errs[:3]}")
+            if assemble_check is not None:
+                counterexample = assemble_check(mapping)
+                if counterexample:
+                    out.cegar_rounds += 1
+                    pool.append(counterexample)
+                    out.new_blocked.append(counterexample)
+                    if cfg.incremental:
+                        new_clause = enc.add_blocked_combination(
+                            counterexample)
+                        if new_clause is None:
+                            # counterexample outside the literal space:
+                            # nothing to block; a rebuild would loop on
+                            # the same mapping, so advance II instead
+                            return out
+                    continue  # re-solve same II with the combo blocked
+            out.mapping = mapping
+            out.verdict = "mapped"
+            return out
+        if status == "unsat":
+            out.proven_unsat = True
+            return out
+        if status == "interrupted":
+            out.verdict = "interrupted"
+            return out
+        # solver timeout ("unknown")
+        out.verdict = "timeout" if cfg.on_timeout == "fail" else "advance"
+        return out
+    return out  # CEGAR rounds exhausted: advance II
+
+
+def _merge_outcome(result: MapResult, out: IIOutcome) -> None:
+    """Fold one :class:`IIOutcome` into a :class:`MapResult` (counters,
+    attempts, liftable facts)."""
+    result.attempts.extend(out.attempts)
+    result.encodings_built += out.encodings_built
+    result.incremental_solves += out.incremental_solves
+    result.cegar_rounds += out.cegar_rounds
+    result.blocked_combos.extend(out.new_blocked)
+    if out.proven_unsat:
+        result.unsat_iis.append(out.ii)
+    if out.validation_errors:
+        result.validation_errors = out.validation_errors
+
+
 def map_dfg(dfg: DFG, grid: PEGrid,
             config: Optional[MapperConfig] = None,
             ii_start: Optional[int] = None,
-            assemble_check=None) -> MapResult:
+            assemble_check=None, *,
+            facts_seed: Optional[Dict] = None,
+            jobs: Optional[int] = None) -> MapResult:
     """``assemble_check(mapping)``: optional CEGAR oracle — returns None if
     the mapping survives code generation, else a placement-triple list to
     forbid (e.g. a prologue-clobber counterexample from the bitstream
-    assembler); the same II is re-solved with the combination blocked."""
+    assembler); the same II is re-solved with the combination blocked.
+
+    ``facts_seed`` (optional, from :mod:`repro.core.facts`): lifted
+    cross-point facts — ``{"blocked": [...combos...], "unsat_iis": [...],
+    "ii_cap": int | None}`` — that pre-seed the search.  ``jobs`` bounds
+    the portfolio racer's worker processes (ignored on the sequential
+    path; ``None`` lets the racer pick).
+    """
     cfg = config or MapperConfig()
-    backend = resolve_backend(cfg.backend)
+    spec = cfg.portfolio().available()
+    if not spec.is_single_sequential:
+        from .portfolio import map_dfg_portfolio
+
+        return map_dfg_portfolio(dfg, grid, cfg, spec,
+                                 ii_start=ii_start,
+                                 assemble_check=assemble_check,
+                                 facts_seed=facts_seed, jobs=jobs)
+    strategy = spec.strategies[0]
     t_start = time.monotonic()
     deadline = (t_start + cfg.total_timeout_s
                 if cfg.total_timeout_s is not None else None)
@@ -159,95 +385,38 @@ def map_dfg(dfg: DFG, grid: PEGrid,
     mii = min_ii(dfg, grid.num_pes)
     ii = max(mii, ii_start or 0)
     result = MapResult(mapping=None, status="unsat-capped", mii=mii,
-                       backend=backend)
+                       backend=strategy.backend)
 
     blocked: List = []
-    while ii <= cfg.ii_max:
+    known_unsat: set = set()
+    ii_max = cfg.ii_max
+    if facts_seed:
+        blocked.extend(facts_seed.get("blocked", ()))
+        known_unsat = set(facts_seed.get("unsat_iis", ()))
+        cap = facts_seed.get("ii_cap")
+        if cap is not None:
+            ii_max = min(ii_max, cap)
+        result.facts_used = len(blocked) + len(known_unsat) + \
+            (1 if cap is not None else 0)
+    while ii <= ii_max:
         if deadline is not None and time.monotonic() > deadline:
             result.status = "timeout"
             break
-        kms = fold_kms(ms, ii)
-        enc: Optional[KMSEncoding] = None
-        session = None
-        new_clause = None
-        found_or_advance = False
-        for _cegar in range(max(cfg.max_cegar_rounds, 1)):
-            t_enc = time.monotonic()
-            try:
-                if enc is None or not cfg.incremental:
-                    enc = KMSEncoding(dfg, kms, grid,
-                                      symmetry_break=cfg.symmetry_break,
-                                      blocked_combinations=blocked,
-                                      deadline=deadline)
-                    session = make_session(backend, enc, amo=cfg.amo,
-                                           deadline=deadline)
-                    result.encodings_built += 1
-                elif new_clause is not None:
-                    # within a CEGAR loop only the new blocking clause
-                    # reaches the live solver
-                    session.add_clause(new_clause)
-            except EncodingBudgetExceeded:
-                result.status = "timeout"
-                found_or_advance = True
-                break
-            encode_time = time.monotonic() - t_enc
-            new_clause = None
-            budget = cfg.per_ii_timeout_s
-            if deadline is not None:
-                remaining = deadline - time.monotonic()
-                if remaining <= 0:
-                    result.status = "timeout"
-                    found_or_advance = True
-                    break
-                budget = min(budget, remaining) if budget else remaining
-            status, model, stats = session.solve(timeout_s=budget)
-            attempt = IIAttempt(ii=ii, status=status, time_s=stats.time_s,
-                                num_vars=stats.num_vars,
-                                num_clauses=stats.num_clauses,
-                                encode_time_s=encode_time,
-                                incremental=stats.incremental)
-            result.attempts.append(attempt)
-            if stats.incremental:
-                result.incremental_solves += 1
-            if status == "sat":
-                mapping = _extract_mapping(dfg, grid, kms, enc, model)
-                ra = allocate_registers(mapping)
-                attempt.ra_ok = ra.ok
-                if not ra.ok:
-                    break  # RA failure: paper increments II and re-searches
-                if cfg.validate:
-                    errs = validate_mapping(mapping, kms=kms)
-                    result.validation_errors = errs
-                    if errs:
-                        raise AssertionError(
-                            f"solver returned invalid mapping at II={ii}: "
-                            f"{errs[:3]}")
-                if assemble_check is not None:
-                    counterexample = assemble_check(mapping)
-                    if counterexample:
-                        result.cegar_rounds += 1
-                        blocked.append(counterexample)
-                        if cfg.incremental:
-                            new_clause = enc.add_blocked_combination(
-                                counterexample)
-                            if new_clause is None:
-                                # counterexample outside the literal space:
-                                # nothing to block; a rebuild would loop on
-                                # the same mapping, so advance II instead
-                                break
-                        continue  # re-solve same II with the combo blocked
-                result.mapping = mapping
-                result.status = "mapped"
-                found_or_advance = True
-                break
-            if status == "unknown" and cfg.on_timeout == "fail":
-                result.status = "timeout"
-                found_or_advance = True
-                break
-            break  # unsat / timeout-advance: bump II
-        if found_or_advance:
+        if ii in known_unsat:
+            ii += 1  # lifted UNSAT-at-II fact: skip without solving
+            continue
+        out = attempt_ii(dfg, grid, ms, ii, cfg, strategy, blocked,
+                         assemble_check=assemble_check, deadline=deadline)
+        _merge_outcome(result, out)
+        blocked.extend(out.new_blocked)
+        if out.verdict == "mapped":
+            result.mapping = out.mapping
+            result.status = "mapped"
             break
-        ii += 1
+        if out.verdict == "timeout":
+            result.status = "timeout"
+            break
+        ii += 1  # "advance" ("interrupted" cannot happen: no stop here)
     result.total_time_s = time.monotonic() - t_start
     return result
 
@@ -275,9 +444,21 @@ def mapping_cache_key(dfg: DFG, grid: PEGrid,
     it, so their keys stay byte-identical to every pre-archspec release.
     """
     cfg = config or MapperConfig()
+    if cfg.strategy is None:
+        # legacy pair: the exact pre-Strategy-API computation, so every
+        # existing cache entry (and committed baseline) stays addressable
+        backend_key, amo_key = resolve_backend(cfg.backend), cfg.amo
+        spec = None
+    else:
+        spec = cfg.portfolio()
+        primary = spec.strategies[0]
+        # a single sequential strategy normalizes its backend-default amo
+        # to None (Strategy.__post_init__), which is byte-identical to the
+        # legacy default-amo key for the same backend
+        backend_key, amo_key = primary.backend, primary.amo
     cfg_key = {
-        "backend": resolve_backend(cfg.backend),
-        "amo": cfg.amo,
+        "backend": backend_key,
+        "amo": amo_key,
         "per_ii_timeout_s": cfg.per_ii_timeout_s,
         "total_timeout_s": cfg.total_timeout_s,
         "ii_max": cfg.ii_max,
@@ -287,6 +468,11 @@ def mapping_cache_key(dfg: DFG, grid: PEGrid,
         "incremental": cfg.incremental,
         # `validate` is excluded: it checks the result, never changes it
     }
+    if spec is not None and not spec.is_single_sequential:
+        # racing/speculation may legitimately return a different (equal-II)
+        # model than the sequential ladder, so portfolio entries get their
+        # own key space; single strategies share the legacy one
+        cfg_key["strategy"] = spec.to_compact()
     payload = {
         "v": 1,  # bump to invalidate every entry on schema/semantic change
         "nodes": [[n.id, n.op] for n in
@@ -311,13 +497,17 @@ def map_dfg_cached(dfg: DFG, grid: PEGrid,
                    config: Optional[MapperConfig] = None,
                    cache=None, assemble_check=None,
                    cache_extra: str = "",
-                   ii_start: Optional[int] = None):
+                   ii_start: Optional[int] = None,
+                   facts_seed: Optional[Dict] = None,
+                   jobs: Optional[int] = None):
     """Cache-aware ``map_dfg``: returns ``(MapResult, cache_hit)``.
 
     ``cache`` is any object with ``get(key) -> Optional[dict]`` /
     ``put(key, dict)`` (see :class:`repro.dse.cache.MappingCache`).
     Timeout results are never stored so a rerun with the same budget gets
-    another chance on a less-loaded machine.
+    another chance on a less-loaded machine.  A result produced under a
+    ``facts_seed`` is never stored either: lifted facts are session-local
+    context the content-addressed key cannot see.
     """
     key = None
     if cache is not None:
@@ -327,7 +517,8 @@ def map_dfg_cached(dfg: DFG, grid: PEGrid,
         if stored is not None:
             return MapResult.from_dict(dfg, grid, stored), True
     res = map_dfg(dfg, grid, config, ii_start=ii_start,
-                  assemble_check=assemble_check)
-    if cache is not None and res.status != "timeout":
+                  assemble_check=assemble_check,
+                  facts_seed=facts_seed, jobs=jobs)
+    if cache is not None and res.status != "timeout" and not facts_seed:
         cache.put(key, res.to_dict())
     return res, False

@@ -99,6 +99,14 @@ def main(argv: Optional[List[str]] = None) -> int:
                     help="comma-separated grid sizes, e.g. 2x2,3x3,4x4")
     ap.add_argument("--backend", default="auto",
                     choices=["auto", "cdcl", "z3"])
+    ap.add_argument("--strategy", default=None,
+                    help="solver strategy or portfolio spec "
+                         "(e.g. cdcl-seq, portfolio:cdcl-seq+cdcl-pair,"
+                         "spec_ii=2, portfolio:auto); mutually exclusive "
+                         "with a non-default --backend")
+    ap.add_argument("--share-facts", action="store_true",
+                    help="lift CEGAR blocking clauses and UNSAT-at-II "
+                         "facts across design points within this sweep")
     ap.add_argument("--jobs", type=int, default=None,
                     help="worker processes (default: os.cpu_count())")
     ap.add_argument("--timeout", type=float, default=60.0,
@@ -151,7 +159,8 @@ def main(argv: Optional[List[str]] = None) -> int:
         kernels=(args.kernels.split(",") if args.kernels
                  else DEFAULT_KERNELS),
         sizes=parse_sizes(args.sizes) if args.sizes else DEFAULT_SIZES,
-        backend=args.backend, per_point_timeout_s=args.timeout,
+        backend=args.backend, strategy=args.strategy,
+        share_facts=args.share_facts, per_point_timeout_s=args.timeout,
         jobs=args.jobs, cache_dir=cache_dir, journal_path=journal_path)
     doc = run_sweep(cfg, resume=args.resume)
     _emit(doc, out)

@@ -47,6 +47,14 @@ class SweepConfig:
     kernels: Sequence[str] = DEFAULT_KERNELS
     sizes: Sequence[Tuple[int, int]] = DEFAULT_SIZES
     backend: str = "auto"
+    #: compact strategy/portfolio spec (``repro.core.backends`` grammar);
+    #: ``None`` keeps the legacy ``backend`` field authoritative
+    strategy: Optional[str] = None
+    #: opt into the cross-point fact store (:mod:`repro.core.facts`):
+    #: facts proven on one design point seed every later point they
+    #: soundly lift to.  Off by default — rows and committed baselines
+    #: stay byte-identical, and fact-seeded results skip the cache.
+    share_facts: bool = False
     per_point_timeout_s: float = 60.0
     per_ii_timeout_s: float = 15.0
     ii_max: int = 32
@@ -57,6 +65,7 @@ class SweepConfig:
 
     def mapper_config(self) -> MapperConfig:
         return MapperConfig(backend=self.backend,
+                            strategy=self.strategy,
                             per_ii_timeout_s=self.per_ii_timeout_s,
                             total_timeout_s=self.per_point_timeout_s,
                             ii_max=self.ii_max)
@@ -64,7 +73,7 @@ class SweepConfig:
     def signature(self) -> Dict:
         """Everything that determines row *content* (not pacing): the
         journal refuses to resume across a change in any of these."""
-        return {
+        sig = {
             "kernels": list(self.kernels),
             "sizes": [f"{r}x{c}" for r, c in self.sizes],
             "backend": resolve_backend(self.backend),
@@ -72,6 +81,12 @@ class SweepConfig:
             "per_ii_timeout_s": self.per_ii_timeout_s,
             "ii_max": self.ii_max,
         }
+        # emitted only when set, so pre-portfolio journals keep resuming
+        if self.strategy is not None:
+            sig["strategy"] = self.strategy
+        if self.share_facts:
+            sig["share_facts"] = True
+        return sig
 
 
 def _annotate_resilience(row: Dict, cr: CompileResult) -> None:
@@ -86,6 +101,18 @@ def _annotate_resilience(row: Dict, cr: CompileResult) -> None:
         row["retries"] = cr.retries
     if cr.degraded is not None:
         row["degraded"] = cr.degraded
+    res = cr.map_result
+    if res is not None:
+        # portfolio/fact telemetry: non-default only (same reasoning)
+        if res.strategies_raced:
+            row["strategies_raced"] = res.strategies_raced
+            row["winner"] = res.winner
+            row["encodings_built"] = res.encodings_built
+            row["incremental_solves"] = res.incremental_solves
+            if res.cancelled_after_s is not None:
+                row["cancelled_after_s"] = round(res.cancelled_after_s, 4)
+        if res.facts_used:
+            row["facts_used"] = res.facts_used
 
 
 def _record(point: DesignPoint, cr: CompileResult) -> Dict:
@@ -159,7 +186,8 @@ def run_sweep(cfg: Optional[SweepConfig] = None,
     # session arch is just the default; compile_many spans cfg.sizes
     arch = tuple(cfg.sizes[0]) if cfg.sizes else "2x2"
     tc = Toolchain(arch, cfg.mapper_config(), cache=cache,
-                   oracle="assembler")
+                   oracle="assembler",
+                   facts="session" if cfg.share_facts else None)
 
     journal = SweepJournal(cfg.journal_path) if cfg.journal_path else None
     done_rows: Dict[Tuple[str, str], Dict] = {}

@@ -9,7 +9,12 @@ plus the two hooks an incremental mapping loop needs:
   rebuilding the instance);
 * :meth:`CDCLSolver.solve` accepts ``assumptions`` — literals asserted as
   scoped decisions for one call and fully undone afterwards, so the same
-  solver answers a sequence of related queries.
+  solver answers a sequence of related queries;
+* cooperative interruption — :meth:`CDCLSolver.interrupt` (cross-thread
+  safe: it only sets a flag) or a ``stop()`` callable passed to
+  :meth:`CDCLSolver.solve` makes the search return ``INTERRUPTED``
+  promptly.  The portfolio racer (``repro.core.portfolio``) uses this to
+  cancel losing strategies; the solver instance stays reusable.
 
 This is the framework's Z3-independent backend: the production mapper uses
 Z3 (as the paper does), but a deployable toolchain cannot hard-require a
@@ -21,13 +26,14 @@ from __future__ import annotations
 
 import time
 from dataclasses import dataclass
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from .cnf import CNF
 
 SAT = "sat"
 UNSAT = "unsat"
 UNKNOWN = "unknown"
+INTERRUPTED = "interrupted"
 
 
 def luby(i: int) -> int:
@@ -78,6 +84,7 @@ class CDCLSolver:
         self.var_decay = 0.95
         self._ok = True
         self._model: Optional[List[int]] = None
+        self._interrupt = False
         if cnf is not None:
             self.ensure_var(cnf.num_vars)
             self.add_clauses(cnf.clauses)
@@ -273,18 +280,31 @@ class CDCLSolver:
 
     # -- main loop -------------------------------------------------------------
 
+    def interrupt(self) -> None:
+        """Request the in-flight :meth:`solve` call to return
+        ``INTERRUPTED``.  Safe to call from another thread (it only sets
+        a flag, checked at every decision and every conflict); the flag
+        is cleared when the next :meth:`solve` call starts, so the
+        solver instance stays reusable after a cancellation."""
+        self._interrupt = True
+
     def solve(self, timeout_s: Optional[float] = None,
               max_conflicts: Optional[int] = None,
-              assumptions: Sequence[int] = ()) -> str:
+              assumptions: Sequence[int] = (),
+              stop: Optional[Callable[[], bool]] = None) -> str:
         """Solve the current clause set under ``assumptions``.
 
         Learned clauses, watch lists, VSIDS activity and saved phases
         persist across calls; assumptions are asserted as scoped decisions
         and fully undone before returning.  ``max_conflicts`` bounds this
-        call, not the solver lifetime.
+        call, not the solver lifetime.  ``stop`` is polled at every
+        decision and every conflict alongside the :meth:`interrupt` flag;
+        either one truthy makes this call return ``INTERRUPTED`` (learned
+        state is kept — a later call may resume the search).
         """
         t0 = time.monotonic()
         self.stats.solve_calls += 1
+        self._interrupt = False  # a cancel aimed at a previous call is stale
         conflicts_at_entry = self.stats.conflicts
         for a in assumptions:
             self.ensure_var(abs(a))
@@ -305,6 +325,8 @@ class CDCLSolver:
         restart_idx = 0
         conflicts_until_restart = 100 * luby(0)
         while True:
+            if self._interrupt or (stop is not None and stop()):
+                return finish(INTERRUPTED)
             if timeout_s is not None and time.monotonic() - t0 > timeout_s:
                 return finish(UNKNOWN)
             if (max_conflicts is not None
@@ -338,6 +360,11 @@ class CDCLSolver:
                 conflict = self._propagate()
                 if conflict is None:
                     break
+                # the conflict loop is where long UNSAT-ish searches live;
+                # polling here bounds cancellation latency by one
+                # propagate+analyze step
+                if self._interrupt or (stop is not None and stop()):
+                    return finish(INTERRUPTED)
                 self.stats.conflicts += 1
                 conflicts_until_restart -= 1
                 if len(self.trail_lim) == 0:

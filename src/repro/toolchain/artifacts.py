@@ -64,6 +64,11 @@ class Program:
     dfg: DFG
     builder: Optional[object] = None  # LoopBuilder
     make_mem: Optional[object] = None  # seed -> (M,) int32 input image
+    #: set iff this Program was resolved *from* the kernel registry by
+    #: name — the portfolio racer may then rebuild it (and its CEGAR
+    #: oracle) inside worker processes.  A same-named traced/inline
+    #: kernel leaves it None: its DFG is not the registry's.
+    registry_name: Optional[str] = None
 
     @property
     def mappable_only(self) -> bool:
@@ -250,6 +255,20 @@ class CompileResult:
             out["map_status"] = self.map_result.status
             out["cegar_rounds"] = self.map_result.cegar_rounds
             out["attempts"] = len(self.map_result.attempts)
+            # portfolio/fact telemetry rides along only when a race ran
+            # (or facts seeded the solve), so sequential digests — and
+            # every committed baseline built from them — stay
+            # byte-identical
+            mr = self.map_result
+            if mr.strategies_raced:
+                out["strategies_raced"] = mr.strategies_raced
+                out["winner"] = mr.winner
+                out["encodings_built"] = mr.encodings_built
+                out["incremental_solves"] = mr.incremental_solves
+                if mr.cancelled_after_s is not None:
+                    out["cancelled_after_s"] = round(mr.cancelled_after_s, 4)
+            if mr.facts_used:
+                out["facts_used"] = mr.facts_used
         if self.mapping is not None:
             out["utilization"] = round(self.mapping.utilization, 4)
         if self.metrics is not None:

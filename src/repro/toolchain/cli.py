@@ -38,12 +38,13 @@ def _cmd_map(args) -> int:
         per_ii_timeout_s=args.timeout / 2,
         total_timeout_s=args.timeout,
         ii_max=args.ii_max,
+        strategy=args.strategy,
     )
     oracle = None if args.no_oracle else "assembler"
     tc = Toolchain(args.arch or args.grid, cfg, cache=args.cache_dir,
                    oracle=oracle)
     t0 = time.monotonic()
-    cr = tc.compile(args.kernel)
+    cr = tc.compile(args.kernel, jobs=args.jobs)
     doc = cr.summary()
     doc["bench"] = "toolchain_map"
     doc["oracle"] = tc.oracle_tag
@@ -64,10 +65,13 @@ def _print_human(cr) -> None:
     if cr.ok:
         m = cr.metrics
         hit = " (cache hit)" if cr.cache_hit else ""
+        race = (f" winner={cr.map_result.winner} "
+                f"raced={cr.map_result.strategies_raced}"
+                if cr.map_result.strategies_raced else "")
         print(
             f"{cr.kernel} @ {where}: II={cr.ii} (mII={cr.mii}) "
             f"backend={cr.map_result.backend} "
-            f"cegar={cr.map_result.cegar_rounds}"
+            f"cegar={cr.map_result.cegar_rounds}{race}"
         )
         print(
             f"  cycles={m.cycles} energy={m.energy_nj:.2f}nJ "
@@ -170,6 +174,21 @@ def main(argv: Optional[List[str]] = None) -> int:
              "see: repro arch list)",
     )
     mp.add_argument("--backend", default="auto", choices=["auto", "cdcl", "z3"])
+    mp.add_argument(
+        "--strategy",
+        default=None,
+        help="solver strategy or portfolio spec (repro.core.backends "
+             "grammar): a name like cdcl-seq / z3-atmost, or "
+             "portfolio:cdcl-seq+z3-atmost,spec_ii=2, or portfolio:auto; "
+             "mutually exclusive with a non-default --backend",
+    )
+    mp.add_argument(
+        "--jobs",
+        type=int,
+        default=None,
+        help="worker processes for a portfolio race "
+             "(default: cpu count; 1 = in-process race)",
+    )
     mp.add_argument(
         "--timeout",
         type=float,

@@ -179,12 +179,27 @@ def _arch_key(grid) -> str:
 # ---------------------------------------------------------------------------
 
 
+def _resolve_runner(kind: str):
+    """Payload-kind dispatch: every worker message carries an optional
+    ``"kind"`` selecting its runner — ``"map"`` (default, one full
+    mapping) or ``"race-ii"`` (one (II, strategy) portfolio attempt,
+    :func:`repro.core.portfolio.run_race_payload`)."""
+    if kind == "race-ii":
+        from ..core.portfolio import run_race_payload
+
+        return run_race_payload
+    return _run_map_payload
+
+
 def _run_map_payload(payload: Dict[str, Any],
-                     inline: bool = False) -> Dict[str, Any]:
+                     inline: bool = False, cancel=None) -> Dict[str, Any]:
     """One (kernel, grid, config, oracle) SAT mapping.  Never raises:
     failures come back as ``{"failure": {...}}`` with stage attribution
     and a truncated traceback.  The worker never touches the on-disk
-    cache — the parent owns it."""
+    cache — the parent owns it.  ``cancel`` (the slot's cancel event) is
+    accepted for runner-signature uniformity; whole-point mappings are
+    not raced, so it is never polled here."""
+    from ..core.facts import seed_from_jsonable
     from ..core.mapper import MapperConfig
     from .session import Toolchain
 
@@ -212,7 +227,9 @@ def _run_map_payload(payload: Dict[str, Any],
                        oracle=payload["oracle"])
         prog = tc.program(kernel)
         stage = "map"
-        res, _hit = tc._map_cached(prog)
+        res, _hit = tc._map_cached(
+            prog, facts_seed=seed_from_jsonable(payload.get("facts")),
+            jobs=payload.get("map_jobs"))
     except BaseException as e:
         if isinstance(e, (KeyboardInterrupt, SystemExit)):
             raise
@@ -242,10 +259,13 @@ def _die_with_parent() -> None:
         pass
 
 
-def _worker_loop(conn, peer_conns=()) -> None:
+def _worker_loop(conn, peer_conns=(), cancel_event=None) -> None:
     """Long-lived worker: receive ``(task_id, payload)``, answer
     ``(task_id, outcome)``; exit on EOF/sentinel (parent death included —
-    a closed pipe ends the loop, no orphan can linger).
+    a closed pipe ends the loop, no orphan can linger).  ``cancel_event``
+    is this slot's cooperative-interruption flag: the parent sets it to
+    abandon the in-flight task (portfolio racing), and clears it before
+    every new assignment.
 
     ``peer_conns`` are the parent-side pipe ends inherited across
     ``fork`` — the siblings' and this worker's own (the parent closes
@@ -267,7 +287,8 @@ def _worker_loop(conn, peer_conns=()) -> None:
         if msg is None:
             return
         task_id, payload = msg
-        out = _run_map_payload(payload)
+        runner = _resolve_runner(payload.get("kind", "map"))
+        out = runner(payload, cancel=cancel_event)
         try:
             conn.send((task_id, out))
         except (BrokenPipeError, OSError):
@@ -295,10 +316,21 @@ class MapTask:
     not_before: float = 0.0        # monotonic backoff eligibility
     map_time_s: float = 0.0        # accumulated across attempts
     failures: List[Dict] = field(default_factory=list)
+    #: late-bound fact lifting (repro.core.facts): called at *assign*
+    #: time — always in the parent, for both fleets — so a point queued
+    #: behind a finished sibling sees the sibling's published facts.  The
+    #: callable itself never crosses the pickle boundary, only its plain-
+    #: JSON return value does.
+    facts_provider: Optional[Callable[[], Optional[Dict]]] = None
 
     def payload(self) -> Dict[str, Any]:
-        return {"kernel": self.kernel, "grid": self.grid, "cfg": self.cfg,
-                "oracle": self.oracle, "attempt": self.attempt}
+        p = {"kernel": self.kernel, "grid": self.grid, "cfg": self.cfg,
+             "oracle": self.oracle, "attempt": self.attempt}
+        if self.facts_provider is not None:
+            facts = self.facts_provider()
+            if facts:
+                p["facts"] = facts
+        return p
 
     def attempt_id(self) -> Tuple[int, int]:
         """Unique per *attempt*, so a stale answer from a worker we
@@ -382,12 +414,15 @@ def _finalize(task: MapTask, out: Optional[Dict]) -> Dict[str, Any]:
 
 
 class _Worker:
-    """One supervised slot: a process plus its dedicated duplex pipe."""
+    """One supervised slot: a process plus its dedicated duplex pipe and
+    a cooperative-cancellation event (portfolio racing)."""
 
-    __slots__ = ("proc", "conn", "task", "deadline_at")
+    __slots__ = ("proc", "conn", "task", "deadline_at", "cancel_event",
+                 "cancelled")
 
     def __init__(self, ctx, peers=()):
         self.conn, child_conn = ctx.Pipe(duplex=True)
+        self.cancel_event = ctx.Event()
         # every parent-side conn open at fork time is inherited by the
         # child — the peers' AND our own (child_conn.close() below only
         # runs in the parent).  The child must drop them all, or each
@@ -395,12 +430,14 @@ class _Worker:
         # parent dies.
         close_in_child = [w.conn for w in peers] + [self.conn]
         self.proc = ctx.Process(target=_worker_loop,
-                                args=(child_conn, close_in_child),
+                                args=(child_conn, close_in_child,
+                                      self.cancel_event),
                                 daemon=True)
         self.proc.start()
         child_conn.close()
         self.task: Optional[MapTask] = None
         self.deadline_at: Optional[float] = None
+        self.cancelled = False
 
     @property
     def busy(self) -> bool:
@@ -408,10 +445,24 @@ class _Worker:
 
     def assign(self, task: MapTask, rcfg: ResilienceConfig,
                now: float) -> None:
+        # the worker is idle (blocked in recv), so clearing a leftover
+        # cancel flag here cannot race the previous task
+        self.cancel_event.clear()
+        self.cancelled = False
         self.task = task
         dl = task.deadline_s(rcfg)
         self.deadline_at = (now + dl) if dl is not None else None
         self.conn.send((task.attempt_id(), task.payload()))
+
+    def cancel(self) -> bool:
+        """Ask the in-flight task to stop (cooperative: the solver polls
+        the event and answers ``"interrupted"``).  Returns True the first
+        time a busy slot is cancelled, False otherwise."""
+        if self.task is None or self.cancelled:
+            return False
+        self.cancelled = True
+        self.cancel_event.set()
+        return True
 
     def shutdown(self) -> None:
         try:

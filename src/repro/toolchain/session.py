@@ -128,6 +128,15 @@ class Toolchain:
     cached, keyed by DFG + arch + config + oracle tag.  ``oracle`` is
     ``"assembler"`` (default), ``None``, or a custom factory — see
     :mod:`repro.toolchain.oracles`.
+
+    ``facts`` opts into the cross-point fact store
+    (:mod:`repro.core.facts`): ``True``/``"session"`` creates a
+    session-scoped :class:`~repro.core.facts.FactStore`, or pass an
+    existing store to share it across sessions.  Facts proven on one
+    design point (CEGAR blocking combos, UNSAT-at-II, feasible-II caps)
+    then seed every later point they soundly lift to.  Off (``None``,
+    the default) every artifact stays byte-identical to a store-less
+    run — fact-seeded results are never written to the mapping cache.
     """
 
     def __init__(
@@ -137,6 +146,7 @@ class Toolchain:
         *,
         cache=None,
         oracle="assembler",
+        facts=None,
     ):
         self.grid = resolve_arch(arch)
         self.arch = arch_label(arch, self.grid)
@@ -147,6 +157,11 @@ class Toolchain:
             cache = MappingCache(cache)
         self.cache = cache
         self.oracle_tag, self._oracle_factory = resolve_oracle(oracle)
+        if facts is True or facts == "session":
+            from ..core.facts import FactStore
+
+            facts = FactStore()
+        self.facts = facts
         self.last_cache_hit = False
 
     # -- stage 1: source -> Program ----------------------------------------
@@ -174,6 +189,7 @@ class Toolchain:
                 dfg=builder.build_dfg(),
                 builder=builder,
                 make_mem=spec.make_mem,
+                registry_name=source,
             )
         if isinstance(source, DFG):
             return Program(name=source.name, origin="dfg", dfg=source)
@@ -208,11 +224,15 @@ class Toolchain:
         source,
         ii_start: Optional[int] = None,
         config: Optional[MapperConfig] = None,
+        jobs: Optional[int] = None,
     ) -> MapResult:
         """SAT-map with the session's CEGAR oracle and cache wired in.
-        ``self.last_cache_hit`` records whether the cache answered."""
+        ``self.last_cache_hit`` records whether the cache answered.
+        ``jobs`` bounds the portfolio racer's workers (ignored on the
+        sequential path)."""
         prog = self.program(source)
-        res, hit = self._map_cached(prog, ii_start=ii_start, config=config)
+        res, hit = self._map_cached(prog, ii_start=ii_start, config=config,
+                                    jobs=jobs)
         self.last_cache_hit = hit
         return res
 
@@ -224,7 +244,19 @@ class Toolchain:
             # diagonal / one-hop interconnects cannot be assembled, so the
             # codegen oracle has nothing to say (map-only architectures)
             return None
-        return self._oracle_factory(prog.builder)
+        check = self._oracle_factory(prog.builder)
+        # the portfolio racer needs a *picklable* recipe for this oracle
+        # to rebuild it inside racing workers; closures can't cross the
+        # boundary, so attach the (kernel, oracle-spec) pair when the
+        # program came from the registry (repro.core.portfolio falls back
+        # to the in-process race otherwise)
+        if check is not None and prog.registry_name is not None:
+            oracle = ("assembler"
+                      if self._oracle_factory is assembler_oracle
+                      else (self.oracle_tag, self._oracle_factory))
+            check.race_info = {"kernel": prog.registry_name,
+                               "oracle": oracle}
+        return check
 
     def _cache_key(self, prog: Program, cfg: MapperConfig, oracled: bool) -> str:
         extra = self.oracle_tag if oracled else ""
@@ -235,11 +267,15 @@ class Toolchain:
         prog: Program,
         ii_start: Optional[int] = None,
         config: Optional[MapperConfig] = None,
+        facts_seed=None,
+        jobs: Optional[int] = None,
     ) -> Tuple[MapResult, bool]:
         cfg = config or self.config
         check = self._oracle_check(prog)
         extra = self.oracle_tag if check is not None else ""
-        return map_dfg_cached(
+        if self.facts is not None and facts_seed is None:
+            facts_seed = self.facts.lift(prog.dfg, self.grid, extra)
+        res, hit = map_dfg_cached(
             prog.dfg,
             self.grid,
             cfg,
@@ -247,7 +283,14 @@ class Toolchain:
             assemble_check=check,
             cache_extra=extra,
             ii_start=ii_start,
+            facts_seed=facts_seed,
+            jobs=jobs,
         )
+        if self.facts is not None:
+            # cache hits publish too: their stored combos/UNSAT facts are
+            # proofs like any other
+            self.facts.publish(prog.dfg, self.grid, extra, res)
+        return res, hit
 
     # -- stage 3: Mapping -> AssembledCIL ----------------------------------
 
@@ -327,6 +370,7 @@ class Toolchain:
         source,
         ii_start: Optional[int] = None,
         config: Optional[MapperConfig] = None,
+        jobs: Optional[int] = None,
     ) -> CompileResult:
         """source -> map -> assemble -> metrics, never raising: failures
         come back as a :class:`CompileResult` with ``stage`` set."""
@@ -363,7 +407,8 @@ class Toolchain:
 
         t0 = time.monotonic()
         try:
-            res, hit = self._map_cached(prog, ii_start=ii_start, config=config)
+            res, hit = self._map_cached(prog, ii_start=ii_start,
+                                        config=config, jobs=jobs)
         except Exception as e:
             timings["map"] = time.monotonic() - t0
             cr.stage, cr.error = "map", format_error(e)
@@ -478,6 +523,7 @@ class Toolchain:
                 pending.append(pt)
                 continue
             res = MapResult.from_dict(prog.dfg, tc.grid, stored)
+            self._publish_facts(tc, prog, res)
             cr = CompileResult(
                 kernel=kernel,
                 rows=tc.grid.spec.rows,
@@ -507,9 +553,28 @@ class Toolchain:
                 # custom oracle: ship (tag, factory) to the workers; the
                 # factory must be picklable (module-level) for jobs > 1
                 oracle = (self.oracle_tag, self._oracle_factory)
-            tasks = [MapTask(key=pt, kernel=pt[0], grid=grid_list[pt[1]],
-                             cfg=dict(cfg_dict), oracle=oracle)
-                     for pt in pending]
+            tasks = []
+            for pt in pending:
+                provider = None
+                if self.facts is not None:
+                    from ..core.facts import seed_to_jsonable
+
+                    tc, prog = sessions[pt[1]], programs[pt[0]]
+
+                    def provider(tc=tc, prog=prog):
+                        # late-bound: runs at *assign* time in the parent,
+                        # so facts published by already-finished siblings
+                        # reach every point still in the queue
+                        extra = (self.oracle_tag
+                                 if tc._oracle_check(prog) is not None
+                                 else "")
+                        return seed_to_jsonable(
+                            self.facts.lift(prog.dfg, tc.grid, extra))
+
+                tasks.append(MapTask(key=pt, kernel=pt[0],
+                                     grid=grid_list[pt[1]],
+                                     cfg=dict(cfg_dict), oracle=oracle,
+                                     facts_provider=provider))
 
             def handle(pt: PointKey, outcome: Dict) -> None:
                 cr = self._result_from_outcome(
@@ -526,6 +591,15 @@ class Toolchain:
                 run_supervised(tasks, jobs=n, rcfg=resilience,
                                on_outcome=handle)
         return [done[pt] for pt in points]
+
+    def _publish_facts(self, tc: "Toolchain", prog: Program, res) -> None:
+        """Feed a finished point's provable facts into the session store
+        (no-op without one)."""
+        if self.facts is None or res is None:
+            return
+        extra = (self.oracle_tag
+                 if tc._oracle_check(prog) is not None else "")
+        self.facts.publish(prog.dfg, tc.grid, extra, res)
 
     def _cache_lookup(self, key: str):
         """``(stored, state)`` — tolerates plain dict-like caches that
@@ -570,8 +644,13 @@ class Toolchain:
             return cr
         res = MapResult.from_dict(prog.dfg, tc.grid, outcome["result"])
         cr.map_result = res
+        self._publish_facts(tc, prog, res)
         if (self.cache is not None and cr.degraded is None
-                and res.status in TERMINAL_MAP_STATUSES):
+                and res.status in TERMINAL_MAP_STATUSES
+                # a fact-seeded solve is session-context-dependent: the
+                # content-addressed key cannot see the seed, so the entry
+                # must not be stored (mirrors map_dfg_cached)
+                and not res.facts_used):
             self.cache.put(keys[pt], outcome["result"])
             spec = chaos.active()
             if (spec is not None and spec.decide(

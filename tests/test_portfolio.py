@@ -1,0 +1,554 @@
+"""Portfolio racer, Strategy API and cross-point fact store.
+
+Covers the PR's acceptance contract end to end: the strategy/portfolio
+grammar and its deprecation shims (single-strategy cache keys stay
+byte-identical to the legacy backend/amo pair), prompt cooperative
+cancellation of an in-flight CDCL search, the RaceBook's
+order-independent lowest-II-wins commit rule (driven with adversarial
+completion orders), portfolio-vs-sequential II equivalence over the
+kernel registry (inline and on the forked fleet), the fact-lifting
+soundness condition with an end-to-end mesh-4x4 -> mesh-6x6 witness,
+and a chaos-crashed racing worker healing to the sequential answer.
+
+Everything runs on the dependency-free CDCL strategies so the module
+stays in tier-1 time budgets without the z3 extra.
+"""
+import json
+import threading
+import time
+from types import SimpleNamespace
+
+import pytest
+
+from repro.cgra import make_grid
+from repro.core import MapperConfig
+from repro.core.backends import (NAMED_STRATEGIES, PortfolioSpec, Strategy,
+                                 parse_portfolio, parse_strategy,
+                                 resolve_portfolio)
+from repro.core.dfg import running_example
+from repro.core.facts import (FactStore, embeds_in, grid_meta, remap_combo,
+                              seed_from_jsonable, seed_to_jsonable)
+from repro.core.mapper import IIOutcome, attempt_ii, mapping_cache_key
+from repro.core.portfolio import RaceBook
+from repro.core.schedule import Slot, asap_alap
+from repro.core.mii import min_ii
+from repro.sat.cdcl import INTERRUPTED, CDCLSolver
+from repro.sat.cnf import CNF
+from repro.toolchain import Toolchain
+from repro.toolchain.chaos import ENV_KEY, ChaosSpec
+from repro.toolchain.cli import main as repro_main
+
+CDCL = MapperConfig(backend="cdcl", per_ii_timeout_s=10.0,
+                    total_timeout_s=30.0)
+PORTFOLIO = "portfolio:cdcl-seq+cdcl-pair,spec_ii=2"
+
+# fast (kernel, grid) points spanning both registry origins; all map in
+# well under a second on CDCL (see benchmarks/portfolio.py for timings)
+EQUIV_CASES = [
+    ("bitcount", (2, 2)),
+    ("reversebits", (2, 2)),
+    ("dotprod", (3, 3)),
+    ("saxpy", (2, 2)),
+    ("relu_clamp", (2, 2)),
+    ("xorshift32", (3, 3)),
+    ("gsm", (2, 2)),
+    ("prefix_sum", (3, 3)),
+    ("popcount", (3, 3)),
+]
+
+
+def _portfolio_cfg(**kw):
+    return MapperConfig(strategy=PORTFOLIO, per_ii_timeout_s=10.0,
+                        total_timeout_s=30.0, **kw)
+
+
+# ---------------------------------------------------------------------------
+# strategy / portfolio grammar
+# ---------------------------------------------------------------------------
+
+
+def test_named_strategies_roundtrip():
+    for name in NAMED_STRATEGIES:
+        assert parse_strategy(name).name == name
+
+
+def test_bare_backend_and_auto_parse():
+    assert parse_strategy("cdcl") == Strategy("cdcl")
+    assert parse_strategy("auto").backend in ("cdcl", "z3")
+    with pytest.raises(ValueError, match="unknown strategy"):
+        parse_strategy("minisat")
+
+
+def test_default_amo_spellings_compare_equal():
+    # an explicitly-passed backend-default AMO normalizes to None, so the
+    # two spellings hash/compare/cache-key identically
+    s = Strategy("cdcl")
+    assert Strategy("cdcl", s.resolved_amo) == s
+
+
+def test_parse_portfolio_roundtrip_and_defaults():
+    spec = parse_portfolio(PORTFOLIO)
+    assert [s.name for s in spec.strategies] == ["cdcl-seq", "cdcl-pair"]
+    assert spec.spec_ii == 2
+    assert spec.to_compact() == PORTFOLIO
+    assert parse_portfolio(spec.to_compact()) == spec
+    # the portfolio: form defaults to spec_ii=2 (II and II+1 in flight)
+    assert parse_portfolio("portfolio:cdcl-seq+cdcl-pair").spec_ii == 2
+    # a bare strategy name is the degenerate single sequential spec
+    bare = parse_portfolio("cdcl-seq")
+    assert bare.is_single_sequential and bare.spec_ii == 1
+    assert bare.to_compact() == "cdcl-seq"
+
+
+def test_parse_portfolio_auto_roster_is_available():
+    spec = parse_portfolio("portfolio:auto")
+    assert len(spec.strategies) >= 2  # the two CDCL strategies at minimum
+    assert all(s.available() for s in spec.strategies)
+
+
+def test_portfolio_grammar_errors():
+    with pytest.raises(ValueError, match="duplicate"):
+        parse_portfolio("portfolio:cdcl-seq+cdcl-seq")
+    with pytest.raises(ValueError, match="spec_ii"):
+        parse_portfolio("portfolio:cdcl-seq+cdcl-pair,spec_ii=0")
+    with pytest.raises(ValueError, match="key=value"):
+        parse_portfolio("portfolio:cdcl-seq,spec_ii")
+    with pytest.raises(ValueError, match="empty portfolio"):
+        parse_portfolio("portfolio:")
+
+
+def test_resolve_portfolio_shim_and_conflict():
+    # legacy backend/amo pair resolves to a single sequential strategy
+    legacy = resolve_portfolio(None, backend="cdcl", amo=None)
+    assert legacy.is_single_sequential
+    assert legacy.strategies[0] == Strategy("cdcl")
+    # setting both surfaces is ambiguous and must raise
+    with pytest.raises(ValueError, match="conflicts"):
+        resolve_portfolio("cdcl-seq", backend="cdcl")
+    with pytest.raises(ValueError, match="conflicts"):
+        resolve_portfolio("cdcl-seq", backend="auto", amo="pairwise")
+
+
+def test_mapper_config_accepts_typed_objects():
+    spec = parse_portfolio(PORTFOLIO)
+    assert MapperConfig(strategy=spec).strategy == PORTFOLIO
+    assert (MapperConfig(strategy=Strategy("cdcl")).strategy
+            == Strategy("cdcl").name)
+
+
+# ---------------------------------------------------------------------------
+# cache keys: the deprecation-shim byte-identity contract
+# ---------------------------------------------------------------------------
+
+
+def test_cache_keys_frozen_for_legacy_configs():
+    """Literal pre-Strategy-API hashes: any drift invalidates every
+    content-addressed cache entry in the wild, so these are frozen."""
+    dfg, g = running_example(), make_grid(2, 2)
+    assert mapping_cache_key(dfg, g) == (
+        "691e2fa0e72eb46483b9251b54d339a0aa44fb56135680cc15d0f2383e9bbb8d")
+    assert mapping_cache_key(dfg, g, MapperConfig(backend="cdcl")) == (
+        "691e2fa0e72eb46483b9251b54d339a0aa44fb56135680cc15d0f2383e9bbb8d")
+    assert mapping_cache_key(
+        dfg, g, MapperConfig(backend="cdcl", amo="sequential")) == (
+        "ead26430423a96298fc3103f9a2fcfd47ee73bf6cfca80a1e90486a2990a694b")
+    assert mapping_cache_key(
+        dfg, g, MapperConfig(backend="cdcl"),
+        extra="oracle=bitstream-prologue") == (
+        "867c32fca10042fdfac95d0a8bf18935bd8868a2eda7a4522b94bb8eda11e3a2")
+
+
+def test_cache_key_single_strategy_matches_legacy_pair():
+    dfg, g = running_example(), make_grid(2, 2)
+    assert (mapping_cache_key(dfg, g, MapperConfig(strategy="cdcl-seq"))
+            == mapping_cache_key(dfg, g, MapperConfig(backend="cdcl")))
+    # a real portfolio keys differently (it is a different computation)
+    assert (mapping_cache_key(dfg, g, MapperConfig(strategy=PORTFOLIO))
+            != mapping_cache_key(dfg, g, MapperConfig(backend="cdcl")))
+
+
+# ---------------------------------------------------------------------------
+# cooperative interruption
+# ---------------------------------------------------------------------------
+
+
+def _pigeonhole_cnf(pigeons: int, holes: int) -> CNF:
+    """PHP(n, n-1): small to state, exponentially hard for CDCL."""
+    cnf = CNF()
+    v = {(p, h): cnf.new_var()
+         for p in range(pigeons) for h in range(holes)}
+    for p in range(pigeons):
+        cnf.add_clause([v[p, h] for h in range(holes)])
+    for h in range(holes):
+        for p1 in range(pigeons):
+            for p2 in range(p1 + 1, pigeons):
+                cnf.add_clause([-v[p1, h], -v[p2, h]])
+    return cnf
+
+
+def test_cdcl_interrupt_lands_promptly_mid_search():
+    # PHP(9,8) runs for >30s uninterrupted; the conflict-loop cancel
+    # check must land within a couple hundred milliseconds
+    solver = CDCLSolver(_pigeonhole_cnf(9, 8))
+    threading.Timer(0.1, solver.interrupt).start()
+    t0 = time.monotonic()
+    assert solver.solve(timeout_s=30.0) == INTERRUPTED
+    assert time.monotonic() - t0 < 2.0
+
+
+def test_cdcl_stop_hook_and_interrupt_flag_reset():
+    solver = CDCLSolver(_pigeonhole_cnf(9, 8))
+    assert solver.solve(timeout_s=30.0, stop=lambda: True) == INTERRUPTED
+    # the flag is per-call: a stale interrupt must not poison this solve
+    solver2 = CDCLSolver(_pigeonhole_cnf(4, 4))
+    solver2.interrupt()
+    solver2._interrupt = False
+    assert solver2.solve(timeout_s=10.0) == "sat"
+
+
+def test_attempt_ii_reports_interrupted_verdict():
+    from repro.cgra.registry import kernel_program
+
+    dfg = kernel_program("gsm").build_dfg()
+    grid = make_grid(2, 2)
+    ms = asap_alap(dfg)
+    ii = min_ii(dfg, grid.num_pes)
+    out = attempt_ii(dfg, grid, ms, ii, CDCL, parse_strategy("cdcl-seq"),
+                     blocked=[], stop=lambda: True)
+    assert out.verdict == "interrupted"
+    assert out.mapping is None and not out.proven_unsat
+
+
+# ---------------------------------------------------------------------------
+# RaceBook: order-independent lowest-II-wins commit rule
+# ---------------------------------------------------------------------------
+
+SPEC2 = parse_portfolio(PORTFOLIO)  # 2 strategies, spec_ii=2
+
+
+def _mapped(ii):
+    return IIOutcome(ii=ii, verdict="mapped",
+                     mapping=SimpleNamespace(ii=ii))
+
+
+def _advance(ii, proven=False):
+    return IIOutcome(ii=ii, verdict="advance", proven_unsat=proven)
+
+
+def test_racebook_speculative_ii_plus_one_waits_for_lower_rung():
+    """II+1 finishing (mapped!) first must not commit anything until the
+    lower rung is decided — then the lowest feasible II wins."""
+    book = RaceBook(SPEC2, start_ii=3, ii_max=10)
+    book.record(4, 0, _mapped(4))       # primary maps II=4 first
+    assert book.resolution() is None    # II=3 still open: no commit
+    book.record(3, 0, _advance(3))      # primary advances II=3
+    assert book.resolution() == ("mapped", 4)
+
+
+def test_racebook_lower_rung_mapping_beats_earlier_higher_win():
+    book = RaceBook(SPEC2, start_ii=3, ii_max=10)
+    book.record(4, 0, _mapped(4))       # speculative II+1 wins early...
+    book.record(3, 0, _mapped(3))       # ...but II=3 turns out feasible
+    assert book.resolution() == ("mapped", 3)
+    assert book.mapped[3][1].mapping.ii == 3
+
+
+def test_racebook_nonprimary_mapped_is_telemetry_only():
+    """A racer's SAT witness must never decide a rung (the primary could
+    still RA-fail it — two opposite-sign verdicts would make the result
+    arrival-order-dependent)."""
+    book = RaceBook(SPEC2, start_ii=3, ii_max=10)
+    book.record(3, 1, _mapped(3))
+    assert book.resolution() is None
+    assert 3 not in book.decided
+    book.record(3, 0, _advance(3))      # primary overrules: advance
+    book.record(4, 0, _mapped(4))
+    assert book.resolution() == ("mapped", 4)
+
+
+def test_racebook_proven_unsat_from_any_strategy_decides():
+    """UNSAT is a fact about the solution space, not about who searched
+    it — a non-primary proof advances the rung immediately."""
+    book = RaceBook(SPEC2, start_ii=3, ii_max=10)
+    book.record(3, 1, _advance(3, proven=True))
+    assert book.decided[3] == "advance"
+    book.record(4, 0, _mapped(4))
+    assert book.resolution() == ("mapped", 4)
+
+
+def test_racebook_order_independence_exhaustive():
+    """Every completion order of the same four events commits the same
+    II (the determinism contract, brute-forced).  The event set must be
+    *realizable* — a SAT witness and an UNSAT proof at one II cannot
+    coexist, which is exactly why proven UNSAT is safe to take from any
+    strategy."""
+    import itertools
+
+    events = [(3, 0, _advance(3)), (3, 1, _advance(3, proven=True)),
+              (4, 0, _mapped(4)), (4, 1, _mapped(4))]
+    outcomes = set()
+    for order in itertools.permutations(range(4)):
+        book = RaceBook(SPEC2, start_ii=3, ii_max=10)
+        for i in order:
+            ii, sidx, out = events[i]
+            book.record(ii, sidx, out)
+        outcomes.add(book.resolution())
+    assert outcomes == {("mapped", 4)}
+
+
+def test_racebook_interrupted_keeps_rung_open():
+    book = RaceBook(SPEC2, start_ii=3, ii_max=10)
+    book.record(3, 0, IIOutcome(ii=3, verdict="interrupted"))
+    assert (3, 0) not in book.completed
+    assert (3, 0) in [t for t in book.wanted()]  # still worth running
+    assert book.resolution() is None
+
+
+def test_racebook_known_unsat_predecides_and_window_skips():
+    book = RaceBook(SPEC2, start_ii=3, ii_max=10, known_unsat=(3, 4))
+    assert book.window() == [5, 6]
+    book.record(5, 0, _mapped(5))
+    assert book.resolution() == ("mapped", 5)
+
+
+def test_racebook_moot_and_cancellation_targets():
+    book = RaceBook(SPEC2, start_ii=3, ii_max=10)
+    book.record(3, 0, _mapped(3))
+    assert book.moot(3) and book.moot(4)   # everything above a win is moot
+    assert book.wanted() == []
+
+
+def test_racebook_primary_loss_settles_on_lowest_index_survivor():
+    book = RaceBook(SPEC2, start_ii=3, ii_max=10)
+    book.record_lost(3, 0)                 # primary crashed out
+    assert book.resolution() is None       # racer still running
+    book.record(3, 1, _mapped(3))
+    assert book.resolution() == ("mapped", 3)
+    # all strategies lost -> the parent must solve the rung inline
+    book2 = RaceBook(SPEC2, start_ii=3, ii_max=10)
+    book2.record_lost(3, 0)
+    book2.record_lost(3, 1)
+    assert book2.needs_inline() == 3
+
+
+def test_racebook_unsat_capped_resolution():
+    book = RaceBook(SPEC2, start_ii=3, ii_max=4)
+    book.record(3, 0, _advance(3))
+    book.record(4, 0, _advance(4))
+    assert book.resolution() == ("unsat-capped", None)
+
+
+# ---------------------------------------------------------------------------
+# portfolio == sequential II over the registry
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kernel,size", EQUIV_CASES,
+                         ids=[f"{k}@{r}x{c}" for k, (r, c) in EQUIV_CASES])
+def test_portfolio_commits_sequential_ii(kernel, size):
+    seq = Toolchain(size, CDCL).map(kernel)
+    port = Toolchain(size, _portfolio_cfg()).map(kernel, jobs=1)
+    assert seq.status == port.status == "mapped"
+    assert port.ii == seq.ii
+    assert not port.validation_errors  # validate_mapping-clean
+    assert port.strategies_raced >= 1
+    assert port.winner
+
+
+def test_portfolio_fleet_race_matches_sequential():
+    seq = Toolchain((2, 2), CDCL).map("gsm")
+    port = Toolchain((2, 2), _portfolio_cfg()).map("gsm", jobs=2)
+    assert port.status == "mapped" and port.ii == seq.ii
+    assert port.winner
+    assert port.strategies_raced >= 2  # a real race, not the inline path
+
+
+# ---------------------------------------------------------------------------
+# fact store: lifting condition, remapping, end-to-end witness
+# ---------------------------------------------------------------------------
+
+
+def _meta(rows, cols, topo="mesh", regs=4, fp=None):
+    return (rows, cols, topo, regs, fp)
+
+
+def test_embeds_in_matrix():
+    assert embeds_in(_meta(2, 2), _meta(3, 3))       # mesh grows: ok
+    assert embeds_in(_meta(2, 3), _meta(2, 3))       # identity: ok
+    assert not embeds_in(_meta(3, 3), _meta(2, 3))   # shrinking: no
+    # torus wrap edges are not preserved by widening -> never lift
+    assert not embeds_in(_meta(2, 2, topo="torus"), _meta(3, 3, topo="torus"))
+    assert not embeds_in(_meta(2, 2, topo="torus"), _meta(3, 3))
+    # register-file mismatch breaks register-pressure facts
+    assert not embeds_in(_meta(2, 2, regs=4), _meta(3, 3, regs=8))
+    # heterogeneous fabrics tie facts to specific PEs
+    assert not embeds_in(_meta(2, 2, fp="abc"), _meta(3, 3))
+    # ... but the *exact* same architecture always transfers verbatim
+    assert embeds_in(_meta(2, 2, topo="torus", fp="abc"),
+                     _meta(2, 2, topo="torus", fp="abc"))
+
+
+def test_grid_meta_reflects_real_grids():
+    g = make_grid(3, 2)
+    rows, cols, topo, regs, fp = grid_meta(g)
+    assert (rows, cols) == (3, 2)
+    assert regs == g.spec.num_regs
+
+
+def test_remap_combo_reindexes_row_major():
+    combo = [(0, 3, Slot(1, 0)), (1, 2, Slot(0, 1))]
+    # 2-wide mesh: PE 3 = (1,1), PE 2 = (1,0); 3-wide: -> 4 and 3
+    out = remap_combo(combo, src_cols=2, dst_cols=3)
+    assert [(n, p) for (n, p, _) in out] == [(0, 4), (1, 3)]
+    assert out[0][2] == Slot(1, 0)  # slots are untouched
+    assert remap_combo(combo, 2, 2) == combo
+
+
+def test_fact_store_publish_lift_directions():
+    store = FactStore()
+    dfg = running_example()
+    small = make_grid(2, 2, torus=False)
+    big = make_grid(3, 3, torus=False)
+    combo = [(0, 1, Slot(0, 0)), (1, 3, Slot(1, 0))]
+    res_small = SimpleNamespace(blocked_combos=[combo], unsat_iis=[2],
+                                status="mapped",
+                                mapping=SimpleNamespace(ii=3))
+    assert store.publish(dfg, small, "assembler", res_small) == 3
+    # publishing the identical facts again is a no-op (dedup)
+    assert store.publish(dfg, small, "assembler", res_small) == 0
+
+    # combos + feasible-II lift UP to the bigger grid
+    seed_up = store.lift(dfg, big, "assembler")
+    assert seed_up["ii_cap"] == 3
+    assert seed_up["blocked"] == [remap_combo(combo, 2, 3)]
+    # ... UNSAT does not (it was proven on the smaller grid)
+    assert seed_up["unsat_iis"] == []
+
+    # UNSAT lifts DOWN: publish on the big grid, lift onto the small one
+    res_big = SimpleNamespace(blocked_combos=[], unsat_iis=[1],
+                              status="unsat-capped", mapping=None)
+    store.publish(dfg, big, "assembler", res_big)
+    seed_down = store.lift(dfg, small, "assembler")
+    assert 1 in seed_down["unsat_iis"]
+    # combos proven on the big grid do not lift down
+    assert seed_down["blocked"] == [combo]  # only the small grid's own
+
+    # facts are keyed by oracle tag: a different oracle sees nothing
+    assert store.lift(dfg, big, "other-oracle") is None
+
+
+def test_fact_seed_json_roundtrip():
+    seed = {"blocked": [[(0, 1, Slot(0, 0)), (2, 3, Slot(1, 1))]],
+            "unsat_iis": [2, 3], "ii_cap": 4}
+    assert seed_from_jsonable(seed_to_jsonable(seed)) == seed
+    assert seed_to_jsonable(None) is None
+    assert seed_from_jsonable(None) is None
+
+
+def test_fact_lifting_end_to_end_mesh4x4_to_6x6():
+    """The ISSUE's soundness witness: facts proven on mesh-4x4 seed the
+    mesh-6x6 solve, which must still commit the same II as a cold run."""
+    store = FactStore()
+    r4 = Toolchain("mesh-4x4", CDCL, facts=store).map("gsm")
+    assert r4.status == "mapped"
+    assert store.published >= 1
+    seeded = Toolchain("mesh-6x6", CDCL, facts=store).map("gsm")
+    cold = Toolchain("mesh-6x6", CDCL).map("gsm")
+    assert seeded.status == cold.status == "mapped"
+    assert seeded.ii == cold.ii
+    assert seeded.facts_used >= 1          # the lift actually happened
+    assert store.lifted >= 1
+    assert cold.facts_used == 0            # and cold runs don't see it
+
+
+def test_fact_seeded_results_never_enter_the_cache(tmp_path):
+    """The cache key cannot see the seed, so a seeded result must not be
+    written back (it could shadow a differently-seeded future run)."""
+    from repro.dse.cache import MappingCache
+
+    store = FactStore()
+    cache = MappingCache(str(tmp_path / "cache"))
+    Toolchain("mesh-4x4", CDCL, facts=store).map("gsm")
+    tc6 = Toolchain("mesh-6x6", CDCL, cache=cache, facts=store)
+    res = tc6.map("gsm")
+    assert res.facts_used >= 1
+    assert cache.stats()["misses"] >= 1
+    # a fresh session over the same cache must miss (nothing was put)
+    tc6b = Toolchain("mesh-6x6", CDCL, cache=cache)
+    tc6b.map("gsm")
+    assert not tc6b.last_cache_hit
+
+
+# ---------------------------------------------------------------------------
+# chaos: a crash-injected racing worker heals to the sequential answer
+# ---------------------------------------------------------------------------
+
+
+def test_chaos_crashed_racing_worker_heals(monkeypatch):
+    seq = Toolchain((2, 2), CDCL).map("gsm")
+    spec = ChaosSpec(seed=11, rate=1.0, kinds=("crash",), attempts=(0,))
+    monkeypatch.setenv(ENV_KEY, spec.to_json())
+    port = Toolchain((2, 2), _portfolio_cfg()).map("gsm", jobs=2)
+    assert port.status == "mapped"
+    assert port.ii == seq.ii
+
+
+# ---------------------------------------------------------------------------
+# CLI surface + digest telemetry
+# ---------------------------------------------------------------------------
+
+
+def test_cli_map_strategy_emits_race_telemetry(capsys):
+    rc = repro_main(["map", "gsm", "--grid", "2x2",
+                     "--strategy", PORTFOLIO, "--jobs", "1", "--json"])
+    assert rc == 0
+    doc = json.loads(capsys.readouterr().out)
+    assert doc["status"] == "ok"
+    assert doc["strategies_raced"] >= 1
+    assert doc["winner"]
+
+
+def test_sequential_digest_has_no_portfolio_fields(capsys):
+    """Baseline byte-identity: a plain sequential digest must not grow
+    any of the new telemetry keys."""
+    rc = repro_main(["map", "bitcount", "--grid", "2x2",
+                     "--backend", "cdcl", "--json"])
+    assert rc == 0
+    doc = json.loads(capsys.readouterr().out)
+    for key in ("strategies_raced", "winner", "cancelled_after_s",
+                "facts_used"):
+        assert key not in doc
+
+
+def test_cli_strategy_backend_conflict_fails():
+    rc = repro_main(["map", "bitcount", "--grid", "2x2",
+                     "--backend", "cdcl", "--strategy", "cdcl-seq"])
+    assert rc != 0
+
+
+def test_dse_rows_carry_race_telemetry_only_when_racing():
+    from repro.dse.sweep import SweepConfig, run_sweep
+
+    base = dict(kernels=["bitcount"], sizes=[(2, 2)], cache_dir=None,
+                per_point_timeout_s=30.0, per_ii_timeout_s=10.0, jobs=1)
+    plain = run_sweep(SweepConfig(backend="cdcl", **base))
+    raced = run_sweep(SweepConfig(strategy=PORTFOLIO, **base))
+    prow, rrow = plain["points"][0], raced["points"][0]
+    assert "strategies_raced" not in prow
+    assert rrow["strategies_raced"] >= 1 and rrow["winner"]
+    assert rrow["ii"] == prow["ii"]
+
+
+def test_sweep_share_facts_lifts_across_points():
+    from repro.dse.sweep import SweepConfig, run_sweep
+
+    cfg = SweepConfig(kernels=["gsm"], sizes=[(2, 2), (3, 3)],
+                      backend="cdcl", share_facts=True, cache_dir=None,
+                      per_point_timeout_s=30.0, per_ii_timeout_s=10.0,
+                      jobs=1)
+    doc = run_sweep(cfg)
+    assert all(r["status"] == "mapped" for r in doc["points"])
+    # signature() gates the new knobs on non-default values so existing
+    # journals keep resuming
+    assert "share_facts" in cfg.signature()
+    assert "share_facts" not in SweepConfig(backend="cdcl").signature()
