@@ -17,7 +17,12 @@ Three artifact shapes are understood:
   are joined on (kernel, arch); Pareto + the acceptance block must match;
 * ``python -m repro map --json`` digests (``bench: "toolchain_map"``) —
   the single-kernel toolchain smoke (heterogeneous specs carry an
-  ``arch`` field that is gated too).
+  ``arch`` field that is gated too);
+* ``benchmarks/serving.py`` documents (``bench: "serving"``) — points
+  are joined on (kernel, arch); per-point status/II/mII and the dedup
+  contract (compiles == unique points, duplicate results identical,
+  deterministic cache-hit ratio) are hard, throughput/latency
+  percentiles are tolerance-gated.
 
 ``--assert-identical`` additionally serializes the *correctness
 projection* of both sides (every machine-independent field, canonical
@@ -61,6 +66,17 @@ TOOLMAP_HARD = ("bench", "kernel", "grid", "arch", "status", "stage", "ii",
                 "mii", "backend", "map_status", "cegar_rounds", "oracle",
                 "utilization", "metrics", "error")
 TOOLMAP_TIME = ("wall_time_s",)
+# the cache/coalesced split depends on arrival timing, so only the
+# deterministic dedup contract (compiles == unique points, duplicates
+# byte-identical, hit ratio = duplicates/n) is hard for the serving lane
+SERVING_HARD = ("requests", "status", "stage", "error", "ii", "mii",
+                "map_status", "backend", "utilization")
+SERVING_TOP_HARD = ("mode", "seed", "zipf_s", "arches", "kernels",
+                    "kernel_arches", "kernel_config", "backend",
+                    "n_requests", "unique_points", "compiles",
+                    "duplicates", "identical_duplicates", "dedup_ok",
+                    "cache_hit_ratio", "rejected", "errors")
+SERVING_TIME = ("throughput_rps", "p50_ms", "p99_ms", "wall_time_s")
 
 
 class Gate:
@@ -186,6 +202,31 @@ def check_arch_dse(cur: Dict, base: Dict, gate: Gate) -> None:
                base.get("wall_time_s"))
 
 
+def check_serving(cur: Dict, base: Dict, gate: Gate) -> None:
+    cur_pts = {(p["kernel"], p["arch"]): p for p in cur.get("points", [])}
+    base_pts = {(p["kernel"], p["arch"]): p for p in base.get("points", [])}
+    missing = sorted(str(k) for k in set(base_pts) - set(cur_pts))
+    if missing:
+        gate.errors.append(f"serving: points missing: {missing}")
+    for key, b in base_pts.items():
+        c = cur_pts.get(key)
+        if c is None:
+            continue
+        where = "serving" + str(key)
+        for f in SERVING_HARD:
+            if f in b:
+                gate.hard(where, f, c.get(f), b.get(f))
+    for f in SERVING_TOP_HARD:
+        if f in base:
+            gate.hard("serving", f, cur.get(f), base.get(f))
+    for f in SERVING_TIME:
+        c, b = cur.get(f), base.get(f)
+        if f.endswith("_ms") and c is not None and b is not None:
+            # convert to seconds so the sub-second noise floor applies
+            c, b = c / 1e3, b / 1e3
+        gate.timed("serving", f, c, b)
+
+
 def check_toolchain_map(cur: Dict, base: Dict, gate: Gate) -> None:
     where = f"toolchain_map({base.get('kernel')}@{base.get('grid')})"
     for f in TOOLMAP_HARD:
@@ -222,6 +263,14 @@ def correctness_projection(doc) -> bytes:
         }
     elif isinstance(doc, dict) and doc.get("bench") == "toolchain_map":
         stable = {k: doc.get(k) for k in TOOLMAP_HARD}
+    elif isinstance(doc, dict) and doc.get("bench") == "serving":
+        stable = {
+            "points": sorted(
+                ({k: p.get(k) for k in ("kernel", "arch") + SERVING_HARD}
+                 for p in doc.get("points", [])),
+                key=lambda p: (str(p["kernel"]), str(p["arch"]))),
+            "summary": {k: doc.get(k) for k in SERVING_TOP_HARD},
+        }
     elif (isinstance(doc, list) and doc
           and doc[0].get("bench") == "portfolio"):
         stable = sorted(
@@ -271,6 +320,8 @@ def main(argv=None) -> int:
         check_arch_dse(cur, base, gate)
     elif isinstance(base, dict) and base.get("bench") == "toolchain_map":
         check_toolchain_map(cur, base, gate)
+    elif isinstance(base, dict) and base.get("bench") == "serving":
+        check_serving(cur, base, gate)
     elif (isinstance(base, list) and base
           and base[0].get("bench") == "portfolio"):
         check_portfolio(cur, base, gate)

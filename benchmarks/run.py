@@ -11,6 +11,9 @@
   frontend_cosim  — traced kernels: map + differential co-simulation
                     (skipped without the jax extra — execution needs the
                     PE-array kernels)
+  serving         — mapping-as-a-service: Zipf workload through the
+                    compile server (throughput, latency percentiles,
+                    dedup/cache-hit contract)
 
 Prints ``name,us_per_call,derived`` CSV per the harness convention and
 writes JSON artifacts under results/.  A lane that raises is reported as
@@ -144,6 +147,20 @@ def main() -> int:
                      f"{s['mean_pruned_fraction']};"
                      f"hetero_ok={acc['count']}/{acc['required']}"))
 
+    def lane_serving():
+        from . import serving
+        # full lane writes beside the committed baseline, never over it
+        name, dt, doc = _run(
+            "serving", lambda: serving.main(out="results/serving.json"))
+        if not doc["dedup_ok"]:
+            raise RuntimeError(
+                f"serving dedup contract violated: compiles="
+                f"{doc['compiles']} unique={doc['unique_points']}")
+        rows.append((name, dt,
+                     f"rps={doc['throughput_rps']};p99_ms={doc['p99_ms']};"
+                     f"cache_hit={doc['cache_hit_ratio']};"
+                     f"dedup_ok={doc['dedup_ok']}"))
+
     lane("fig7_table4", lane_fig7)
     lane("table7_8", lane_table7_8)
     lane("solver_opts", lane_solver_opts)
@@ -151,6 +168,7 @@ def main() -> int:
     lane("portfolio", lane_portfolio)
     lane("dse", lane_dse)
     lane("arch_dse", lane_arch_dse)
+    lane("serving", lane_serving)
     lane("frontend_cosim", lane_frontend)
 
     print("\nname,us_per_call,derived")

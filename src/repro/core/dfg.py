@@ -137,6 +137,28 @@ class DFG:
         """Opcode -> node count (front-end reporting / diagnostics)."""
         return dict(Counter(node.op for node in self.nodes.values()))
 
+    # -- serialization (repro.serve ships bare DFGs over the wire) ---------------
+
+    def to_dict(self) -> Dict:
+        """Plain-JSON form; inverse of :meth:`from_dict`.  Adjacency and
+        flag/acyclicity validation are rebuilt on load (derived data)."""
+        return {
+            "name": self.name,
+            "nodes": [[n.id, n.op, list(n.operands), n.imm, n.name]
+                      for n in (self.nodes[i] for i in self.node_ids())],
+            "edges": [[e.src, e.dst, e.distance, e.kind]
+                      for e in self.edges],
+        }
+
+    @classmethod
+    def from_dict(cls, d: Dict) -> "DFG":
+        nodes = [Node(int(i), op=op, operands=tuple(operands), imm=imm,
+                      name=name)
+                 for (i, op, operands, imm, name) in d["nodes"]]
+        edges = [Edge(int(s), int(t), int(dist), kind)
+                 for (s, t, dist, kind) in d["edges"]]
+        return cls(nodes, edges, name=d.get("name", "dfg"))
+
     # -- convenience constructors ------------------------------------------------
 
     @staticmethod

@@ -78,6 +78,17 @@ class MapperConfig:
         return resolve_portfolio(self.strategy, self.backend, self.amo)
 
     @classmethod
+    def from_dict(cls, d: Dict) -> "MapperConfig":
+        """Revive from plain data (wire requests, journals).  Unknown
+        keys raise — a version-skewed client must fail loudly, not have
+        its overrides silently dropped."""
+        known = {f.name for f in dataclasses.fields(cls)}
+        unknown = sorted(set(d) - known)
+        if unknown:
+            raise ValueError(f"unknown MapperConfig keys: {unknown}")
+        return cls(**d)
+
+    @classmethod
     def for_bench(cls, backend: str = "auto",
                   per_ii_timeout_s: float = 20.0, ii_max: int = 30,
                   total_timeout_s: Optional[float] = None,

@@ -1,5 +1,13 @@
+"""Deprecated entry point — ``python -m repro sweep`` is the canonical
+CLI (one surface for map/cosim/sweep/serve).  This shim forwards
+verbatim and will be removed after a deprecation cycle."""
+
 import sys
+import warnings
 
-from .cli import main
+from ..toolchain.cli import main
 
-sys.exit(main())
+warnings.warn(
+    "python -m repro.dse is deprecated; use: python -m repro sweep",
+    DeprecationWarning, stacklevel=1)
+sys.exit(main(["sweep", *sys.argv[1:]]))

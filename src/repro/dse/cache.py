@@ -95,6 +95,12 @@ class MappingCache:
                 pass
             raise
 
+    def hit_ratio(self) -> float:
+        """Session hit fraction (0.0 on an untouched cache) — the serving
+        benchmark's cache-behavior metric."""
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
     def stats(self) -> Dict:
         return {"dir": self.root, "hits": self.hits, "misses": self.misses,
                 "corrupt": self.corrupt}

@@ -1,7 +1,13 @@
-"""``python -m repro.frontend`` — co-simulate every traced kernel."""
+"""Deprecated entry point — ``python -m repro cosim`` is the canonical
+CLI (one surface for map/cosim/sweep/serve).  This shim forwards
+verbatim and will be removed after a deprecation cycle."""
 
 import sys
+import warnings
 
-from .verify import main
+from ..toolchain.cli import main
 
-sys.exit(main())
+warnings.warn(
+    "python -m repro.frontend is deprecated; use: python -m repro cosim",
+    DeprecationWarning, stacklevel=1)
+sys.exit(main(["cosim", *sys.argv[1:]]))

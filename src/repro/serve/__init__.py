@@ -1,0 +1,41 @@
+"""Mapping-as-a-service: the asyncio compile server, its versioned wire
+protocol, and typed clients.
+
+Quickstart::
+
+    $ python -m repro serve --port 7433 --cache-dir results/serve_cache
+    $ python -m repro submit dotprod --grid 4x4
+
+or in-process::
+
+    from repro.serve import CompileServer, ServeClient
+
+See :mod:`repro.serve.protocol` for the wire schema and
+``EXPERIMENTS.md`` §Serving for the benchmark lane.
+"""
+
+from .client import ServeClient, ServeError, request_sync
+from .protocol import (
+    DEFAULT_PORT,
+    WIRE_VERSION,
+    CompileRequest,
+    ProtocolError,
+    wire_source,
+)
+from .queue import InflightCompiles, ServeStats, TenantBudgets
+from .server import CompileServer
+
+__all__ = [
+    "CompileServer",
+    "CompileRequest",
+    "ServeClient",
+    "ServeError",
+    "request_sync",
+    "wire_source",
+    "InflightCompiles",
+    "TenantBudgets",
+    "ServeStats",
+    "ProtocolError",
+    "WIRE_VERSION",
+    "DEFAULT_PORT",
+]

@@ -4,11 +4,16 @@ Subcommands::
 
     repro map KERNEL --grid 4x4 [--json] [--out F]   one kernel -> metrics
     repro map KERNEL --arch bordermem-4x4            ... on a hetero spec
+    repro serve [--port N | --stdio]                 compile server (repro.serve)
+    repro submit KERNEL [--grid 4x4] [--json]        one request to a server
     repro cosim [...]    differential co-simulation (repro.frontend args)
     repro sweep [...]    design-space sweep          (repro.dse args)
     repro list [--origin handwritten|traced]         registered kernels
     repro arch list                                  presets + spec grammar
     repro arch show SPEC                             one spec, fully expanded
+
+(The old ``python -m repro.dse`` / ``python -m repro.frontend`` module
+entry points are deprecation shims forwarding to ``sweep`` / ``cosim``.)
 
 ``map`` compiles one registry kernel end-to-end through a
 :class:`~repro.toolchain.session.Toolchain` session and prints either a
@@ -81,6 +86,95 @@ def _print_human(cr) -> None:
     else:
         why = f" — {cr.error}" if cr.error else ""
         print(f"{cr.kernel} @ {where}: {cr.status} at stage {cr.stage!r}{why}")
+
+
+def _cmd_serve(args) -> int:
+    import asyncio
+
+    from ..serve.server import CompileServer
+
+    cfg = MapperConfig(
+        backend=args.backend,
+        per_ii_timeout_s=args.timeout / 2,
+        total_timeout_s=args.timeout,
+        ii_max=args.ii_max,
+    )
+    server = CompileServer(
+        args.arch,
+        cfg,
+        cache=args.cache_dir,
+        jobs=args.jobs,
+        tenant_budget=args.tenant_budget,
+        inline=args.inline,
+        oracle=None if args.no_oracle else "assembler",
+    )
+
+    from ..serve.protocol import DEFAULT_PORT
+
+    listen_port = args.port if args.port is not None else DEFAULT_PORT
+
+    async def run() -> None:
+        if args.stdio:
+            await server.serve_stdio()
+        else:
+            host, port = await server.start(args.host, listen_port)
+            print(
+                f"repro-serve listening on {host}:{port} "
+                f"(jobs={server.jobs}, arch={args.arch})",
+                file=sys.stderr,
+            )
+            await server.wait_closed()
+
+    try:
+        asyncio.run(run())
+    except KeyboardInterrupt:
+        pass
+    finally:
+        server.close()
+    return 0
+
+
+def _cmd_submit(args) -> int:
+    from ..serve.client import request_sync
+    from ..serve.protocol import DEFAULT_PORT
+    from .artifacts import CompileResult
+
+    port = args.port if args.port is not None else DEFAULT_PORT
+    config = {}
+    if args.backend != "auto":
+        config["backend"] = args.backend
+    if args.timeout is not None:
+        config["total_timeout_s"] = args.timeout
+        config["per_ii_timeout_s"] = args.timeout / 2
+    if args.ii_max is not None:
+        config["ii_max"] = args.ii_max
+    resp = request_sync(
+        args.kernel,
+        host=args.host,
+        port=port,
+        shutdown=args.shutdown,
+        arch=args.arch or args.grid,
+        config=config or None,
+        strategy=args.strategy,
+        priority=args.priority,
+        tenant=args.tenant,
+    )
+    if resp.get("type") != "result":
+        print(json.dumps(resp, indent=1, sort_keys=True), file=sys.stderr)
+        return 1
+    cr = CompileResult.from_dict(resp["result"])
+    doc = cr.summary()
+    doc["served"] = resp["served"]
+    if args.out:
+        os.makedirs(os.path.dirname(args.out) or ".", exist_ok=True)
+        with open(args.out, "w") as fh:
+            json.dump(doc, fh, indent=1, sort_keys=True)
+    if args.json:
+        print(json.dumps(doc, indent=1, sort_keys=True))
+    else:
+        _print_human(cr)
+        print(f"  served={resp['served']}")
+    return 0 if cr.ok else 1
 
 
 def _cmd_arch_list(args) -> int:
@@ -213,6 +307,99 @@ def main(argv: Optional[List[str]] = None) -> int:
         help="disable the assembler CEGAR oracle",
     )
     mp.set_defaults(fn=_cmd_map)
+
+    sv = sub.add_parser("serve", help="start the compile server (repro.serve)")
+    sv.add_argument("--host", default="127.0.0.1")
+    sv.add_argument(
+        "--port",
+        type=int,
+        default=None,
+        help="TCP port (default: repro.serve.DEFAULT_PORT; 0 = ephemeral)",
+    )
+    sv.add_argument(
+        "--stdio",
+        action="store_true",
+        help="serve one connection over stdin/stdout instead of TCP",
+    )
+    sv.add_argument("--arch", default="4x4",
+                    help="default architecture for the hello banner")
+    sv.add_argument(
+        "--jobs",
+        type=int,
+        default=None,
+        help="warm solver workers (default: cpu count)",
+    )
+    sv.add_argument(
+        "--inline",
+        action="store_true",
+        help="thread-backed workers instead of processes (no fork; "
+             "cooperative deadlines only)",
+    )
+    sv.add_argument("--backend", default="auto",
+                    choices=["auto", "cdcl", "z3"])
+    sv.add_argument(
+        "--timeout",
+        type=float,
+        default=120.0,
+        help="per-request mapping budget in seconds (default 120)",
+    )
+    sv.add_argument("--ii-max", type=int, default=32)
+    sv.add_argument(
+        "--cache-dir",
+        default=None,
+        help="content-addressed mapping cache shared by all requests",
+    )
+    sv.add_argument(
+        "--tenant-budget",
+        type=int,
+        default=None,
+        help="max concurrently-admitted requests per tenant "
+             "(default: unlimited)",
+    )
+    sv.add_argument(
+        "--no-oracle",
+        action="store_true",
+        help="disable the assembler CEGAR oracle",
+    )
+    sv.set_defaults(fn=_cmd_serve)
+
+    sb = sub.add_parser("submit", help="send one request to a compile server")
+    sb.add_argument("kernel", help="registered kernel name")
+    sb.add_argument("--host", default="127.0.0.1")
+    sb.add_argument("--port", type=int, default=None)
+    sb.add_argument("--grid", default="4x4")
+    sb.add_argument("--arch", default=None,
+                    help="architecture spec or preset (overrides --grid)")
+    sb.add_argument("--backend", default="auto",
+                    choices=["auto", "cdcl", "z3"])
+    sb.add_argument(
+        "--strategy",
+        default=None,
+        help="solver strategy / portfolio spec (repro.core.backends grammar)",
+    )
+    sb.add_argument(
+        "--timeout",
+        type=float,
+        default=None,
+        help="override the server's mapping budget for this request",
+    )
+    sb.add_argument("--ii-max", type=int, default=None)
+    sb.add_argument("--priority", type=int, default=0,
+                    help="queue priority (higher runs sooner)")
+    sb.add_argument("--tenant", default="default",
+                    help="admission-budget bucket")
+    sb.add_argument(
+        "--json",
+        action="store_true",
+        help="print the JSON digest instead of a summary",
+    )
+    sb.add_argument("--out", default=None, help="also write the digest here")
+    sb.add_argument(
+        "--shutdown",
+        action="store_true",
+        help="ask the server to shut down after answering",
+    )
+    sb.set_defaults(fn=_cmd_submit)
 
     sub.add_parser(
         "cosim",

@@ -9,16 +9,25 @@ stalled its slot forever (the per-point ``total_timeout_s`` is enforced
 collapsed into an opaque per-point ``"error"`` row.  This module owns
 the countermeasures:
 
-**Supervision.**  :func:`run_supervised` keeps ``jobs`` long-lived
-worker processes, each driven over its own pipe, and multiplexes on the
-parent side with ``multiprocessing.connection.wait``.  The parent — not
-the worker — enforces a wall-clock deadline per attempt
+**Supervision.**  :class:`WorkerPool` keeps ``jobs`` long-lived worker
+processes, each driven over its own pipe, and multiplexes on the parent
+side with ``multiprocessing.connection.wait``.  The parent — not the
+worker — enforces a wall-clock deadline per attempt
 (``deadline_factor * total_timeout_s + deadline_slack_s``): a worker
 that blows it is SIGKILLed, its slot is respawned, and the point goes
 back on the queue.  A worker that dies on its own (segfault, OOM kill)
 surfaces as EOF on its pipe; the supervisor classifies the exit code,
 heals the pool, and requeues — ``BrokenProcessPool`` cannot happen
 because there is no shared pool state to break.
+
+**Pool, not batch.**  The pool outlives any one batch: ``submit()`` is
+thread-safe (a self-pipe wakes the multiplexer), eligible tasks are
+assigned to idle slots highest-:attr:`MapTask.priority` first, and
+``start()`` moves the driver onto a daemon thread so a long-lived
+embedder (the ``repro.serve`` compile server) keeps warm solver workers
+across requests.  :func:`run_supervised` is now a thin batch adapter —
+create, submit everything, drain, shut down — with behavior identical
+to the PR-6 run-to-completion fleet.
 
 **Retry, then degrade.**  Each point climbs a ladder:
 
@@ -55,6 +64,7 @@ import heapq
 import multiprocessing
 import os
 import signal
+import threading
 import time
 import traceback as _traceback
 from dataclasses import dataclass, field
@@ -196,9 +206,11 @@ def _run_map_payload(payload: Dict[str, Any],
     """One (kernel, grid, config, oracle) SAT mapping.  Never raises:
     failures come back as ``{"failure": {...}}`` with stage attribution
     and a truncated traceback.  The worker never touches the on-disk
-    cache — the parent owns it.  ``cancel`` (the slot's cancel event) is
-    accepted for runner-signature uniformity; whole-point mappings are
-    not raced, so it is never polled here."""
+    cache — the parent owns it.  ``kernel`` is a registry name or a bare
+    :class:`~repro.core.dfg.DFG` (the compile server's map-only wire
+    requests pickle whole graphs).  ``cancel`` (the slot's cancel event)
+    is accepted for runner-signature uniformity; whole-point mappings
+    are not raced, so it is never polled here."""
     from ..core.facts import seed_from_jsonable
     from ..core.mapper import MapperConfig
     from .session import Toolchain
@@ -209,7 +221,9 @@ def _run_map_payload(payload: Dict[str, Any],
 
     spec = chaos.active()
     if spec is not None:
-        kind = spec.decide(kernel, _arch_key(grid), attempt)
+        chaos_key = (kernel if isinstance(kernel, str)
+                     else getattr(kernel, "name", "<dfg>"))
+        kind = spec.decide(chaos_key, _arch_key(grid), attempt)
         if kind in ("crash", "hang", "solver-error"):
             try:
                 chaos.inject_worker_fault(kind, spec, inline=inline)
@@ -259,7 +273,8 @@ def _die_with_parent() -> None:
         pass
 
 
-def _worker_loop(conn, peer_conns=(), cancel_event=None) -> None:
+def _worker_loop(conn, peer_conns=(), cancel_event=None,
+                 in_thread: bool = False) -> None:
     """Long-lived worker: receive ``(task_id, payload)``, answer
     ``(task_id, outcome)``; exit on EOF/sentinel (parent death included —
     a closed pipe ends the loop, no orphan can linger).  ``cancel_event``
@@ -272,13 +287,20 @@ def _worker_loop(conn, peer_conns=(), cancel_event=None) -> None:
     our ``child_conn`` end only after the fork).  They must be closed
     here, or a worker keeps its own pipe writable and never sees EOF
     when the parent dies (the orphan fleet a chaos
-    ``abort_after_points`` exit would otherwise leave behind)."""
-    _die_with_parent()
-    for peer in peer_conns:
-        try:
-            peer.close()
-        except OSError:
-            pass
+    ``abort_after_points`` exit would otherwise leave behind).
+
+    ``in_thread`` is the :class:`_InlineWorker` mode: the loop runs on a
+    thread of the parent process, so it must not arm
+    ``PR_SET_PDEATHSIG`` (that would cover the whole process) and it
+    runs payloads ``inline`` so injected chaos faults raise instead of
+    killing the embedder."""
+    if not in_thread:
+        _die_with_parent()
+        for peer in peer_conns:
+            try:
+                peer.close()
+            except OSError:
+                pass
     while True:
         try:
             msg = conn.recv()
@@ -288,7 +310,7 @@ def _worker_loop(conn, peer_conns=(), cancel_event=None) -> None:
             return
         task_id, payload = msg
         runner = _resolve_runner(payload.get("kind", "map"))
-        out = runner(payload, cancel=cancel_event)
+        out = runner(payload, inline=in_thread, cancel=cancel_event)
         try:
             conn.send((task_id, out))
         except (BrokenPipeError, OSError):
@@ -305,10 +327,13 @@ class MapTask:
     """One design point riding the retry/degradation ladder."""
 
     key: Any                       # opaque caller key (e.g. (kernel, gi))
-    kernel: str
+    kernel: Any                    # registry name, or a bare DFG (map-only)
     grid: Any                      # PEGrid (pickles whole)
     cfg: Dict[str, Any]            # MapperConfig asdict, mutated per rung
     oracle: Any                    # "assembler" | None | (tag, factory)
+    #: scheduling priority: higher runs sooner among backoff-eligible
+    #: tasks (FIFO within a priority level); batch fleets leave it 0
+    priority: int = 0
     attempt: int = 0               # global attempt counter (chaos key)
     retries_in_rung: int = 0
     rung: int = -1                 # -1 = original config
@@ -420,15 +445,20 @@ class _Worker:
     __slots__ = ("proc", "conn", "task", "deadline_at", "cancel_event",
                  "cancelled")
 
-    def __init__(self, ctx, peers=()):
+    #: the parent may SIGKILL this slot on a blown deadline
+    enforces_deadline = True
+
+    def __init__(self, ctx, peers=(), extra_close=()):
         self.conn, child_conn = ctx.Pipe(duplex=True)
         self.cancel_event = ctx.Event()
         # every parent-side conn open at fork time is inherited by the
         # child — the peers' AND our own (child_conn.close() below only
         # runs in the parent).  The child must drop them all, or each
         # worker keeps its own pipe writable and never sees EOF when the
-        # parent dies.
-        close_in_child = [w.conn for w in peers] + [self.conn]
+        # parent dies.  ``extra_close`` adds pool-level conns (the wake
+        # pipe) to the same hygiene list.
+        close_in_child = ([w.conn for w in peers] + [self.conn]
+                          + list(extra_close))
         self.proc = ctx.Process(target=_worker_loop,
                                 args=(child_conn, close_in_child,
                                       self.cancel_event),
@@ -442,6 +472,10 @@ class _Worker:
     @property
     def busy(self) -> bool:
         return self.task is not None
+
+    @property
+    def exitcode(self) -> Optional[int]:
+        return self.proc.exitcode
 
     def assign(self, task: MapTask, rcfg: ResilienceConfig,
                now: float) -> None:
@@ -484,119 +518,312 @@ class _Worker:
         return self.proc.exitcode
 
 
-def run_supervised(tasks: List[MapTask], jobs: int,
-                   rcfg: Optional[ResilienceConfig] = None,
-                   on_outcome: Optional[Callable[[Any, Dict], None]] = None,
-                   ) -> Dict[Any, Dict]:
-    """Drive ``tasks`` through a self-healing worker fleet.
+class _InlineWorker:
+    """A slot backed by a thread of *this* process, speaking the exact
+    same pipe protocol as :class:`_Worker` (the multiplexer cannot tell
+    them apart).  For embedders that must not fork — the serving tests,
+    stdio servers under multi-threaded runtimes — at the cost of
+    process-grade isolation: deadlines degrade to the solver's
+    cooperative budgets (a thread cannot be SIGKILLed), exactly like
+    :func:`run_inline`."""
 
-    Returns ``{task.key: outcome}``; ``on_outcome`` additionally fires in
-    completion order (journaling hook).  Never raises for per-point
-    failures — every task terminates with a result or a typed failure.
-    """
-    rcfg = rcfg or ResilienceConfig()
-    ctx = multiprocessing.get_context()
-    outcomes: Dict[Any, Dict] = {}
-    seq = 0
-    ready: List[Tuple[float, int, MapTask]] = []  # (not_before, seq, task)
-    for t in tasks:
-        heapq.heappush(ready, (t.not_before, seq, t))
-        seq += 1
-    n = max(1, min(jobs, len(tasks)))
-    workers: List[_Worker] = []
+    __slots__ = ("conn", "cancel_event", "task", "deadline_at", "cancelled",
+                 "_thread")
 
-    def settle(task: MapTask, out: Optional[Dict], failure: Optional[Dict],
+    enforces_deadline = False
+
+    def __init__(self, ctx=None, peers=(), extra_close=()):
+        self.conn, child_conn = multiprocessing.Pipe(duplex=True)
+        self.cancel_event = threading.Event()
+        self._thread = threading.Thread(
+            target=_worker_loop,
+            args=(child_conn, (), self.cancel_event),
+            kwargs={"in_thread": True},
+            daemon=True,
+        )
+        self._thread.start()
+        self.task: Optional[MapTask] = None
+        self.deadline_at: Optional[float] = None
+        self.cancelled = False
+
+    @property
+    def busy(self) -> bool:
+        return self.task is not None
+
+    @property
+    def exitcode(self) -> Optional[int]:
+        return None
+
+    def assign(self, task: MapTask, rcfg: ResilienceConfig,
                now: float) -> None:
-        nonlocal seq
+        self.cancel_event.clear()
+        self.cancelled = False
+        self.task = task
+        self.deadline_at = None  # cooperative budgets only (no SIGKILL)
+        self.conn.send((task.attempt_id(), task.payload()))
+
+    cancel = _Worker.cancel
+
+    def shutdown(self) -> None:
+        try:
+            self.conn.send(None)
+        except (BrokenPipeError, OSError):
+            pass
+        self.conn.close()
+        self._thread.join(timeout=1.0)
+
+    def kill(self) -> Optional[int]:  # pragma: no cover - never scheduled
+        raise RuntimeError("inline workers enforce no deadline to kill for")
+
+
+class WorkerPool:
+    """Persistent supervised fleet with a thread-safe ``submit`` API.
+
+    The PR-6 fleet ran one batch to completion inside a single function
+    call; the pool decouples worker lifetime from any batch so a
+    long-lived embedder (the ``repro.serve`` compile server) keeps warm
+    solver workers across requests.  Everything the batch fleet proved —
+    parent-side deadlines, crash healing, the retry/degradation ladder,
+    typed terminal failures — happens unchanged inside :meth:`_step`.
+
+    Scheduling: among backoff-eligible tasks, higher
+    :attr:`MapTask.priority` is assigned first (FIFO within a level); a
+    task in backoff is ordered by its eligibility time first, so a
+    retrying high-priority point cannot pin the queue.
+
+    Two driving modes: :meth:`drain` runs the multiplexer in the calling
+    thread until the queue is empty (batch mode, what
+    :func:`run_supervised` uses), or :meth:`start` spawns a daemon
+    driver thread and ``submit``/outcome callbacks flow concurrently
+    (server mode; callbacks fire on the driver thread).
+
+    ``inline=True`` swaps worker processes for :class:`_InlineWorker`
+    threads — same protocol, no forking, cooperative deadlines only.
+    """
+
+    def __init__(self, jobs: Optional[int] = None,
+                 rcfg: Optional[ResilienceConfig] = None,
+                 inline: bool = False):
+        self.rcfg = rcfg or ResilienceConfig()
+        self.inline = inline
+        self._ctx = multiprocessing.get_context()
+        self._jobs = max(1, jobs if jobs is not None else (os.cpu_count()
+                                                           or 1))
+        self._lock = threading.Lock()
+        self._idle = threading.Condition(self._lock)
+        # heap of (not_before, -priority, seq, task): eligibility first —
+        # every entry behind an ineligible top is ineligible too — then
+        # priority, then submission order
+        self._ready: List[Tuple[float, int, int, MapTask]] = []
+        self._seq = 0
+        self._pending = 0
+        self._callbacks: Dict[int, Optional[Callable[[Any, Dict], None]]] = {}
+        self._stop = False
+        self._thread: Optional[threading.Thread] = None
+        # self-pipe: submit() wakes a multiplexer blocked in _conn_wait
+        self._wake_r, self._wake_w = multiprocessing.Pipe(duplex=False)
+        self._workers: List[Any] = []
+        for _ in range(self._jobs):
+            self._workers.append(self._new_worker(self._workers))
+
+    def _new_worker(self, peers):
+        if self.inline:
+            return _InlineWorker()
+        return _Worker(self._ctx, peers=peers,
+                       extra_close=(self._wake_r, self._wake_w))
+
+    # -- submission --------------------------------------------------------
+
+    def submit(self, task: MapTask,
+               on_outcome: Optional[Callable[[Any, Dict], None]] = None,
+               ) -> None:
+        """Enqueue one task; ``on_outcome(task.key, outcome)`` fires on
+        the driving thread when it terminates (result or typed failure).
+        Callable from any thread."""
+        with self._lock:
+            if self._stop:
+                raise RuntimeError("WorkerPool is shut down")
+            self._pending += 1
+            self._callbacks[id(task)] = on_outcome
+            self._push(task)
+            try:
+                self._wake_w.send_bytes(b"w")
+            except (BrokenPipeError, OSError):  # pragma: no cover
+                pass
+
+    def _push(self, task: MapTask) -> None:
+        heapq.heappush(self._ready, (task.not_before, -task.priority,
+                                     self._seq, task))
+        self._seq += 1
+
+    def pending(self) -> int:
+        """Tasks submitted but not yet settled (queued + in flight)."""
+        with self._lock:
+            return self._pending
+
+    # -- driving -----------------------------------------------------------
+
+    def start(self) -> None:
+        """Run the multiplexer on a daemon thread (server mode)."""
+        if self._thread is None:
+            self._thread = threading.Thread(target=self._run, daemon=True,
+                                            name="repro-worker-pool")
+            self._thread.start()
+
+    def _run(self) -> None:
+        while not self._stop:
+            self._step()
+
+    def drain(self) -> None:
+        """Block until every submitted task has settled.  Drives the
+        multiplexer in the calling thread unless :meth:`start` owns it."""
+        if self._thread is not None:
+            with self._idle:
+                self._idle.wait_for(lambda: self._pending == 0)
+            return
+        while self.pending():
+            self._step()
+
+    def shutdown(self) -> None:
+        """Stop the driver thread (if any) and the workers.  Unsettled
+        tasks never fire their callbacks — shut down drained pools."""
+        with self._lock:
+            self._stop = True
+            try:
+                self._wake_w.send_bytes(b"w")
+            except (BrokenPipeError, OSError):  # pragma: no cover
+                pass
+        if self._thread is not None:
+            self._thread.join(timeout=10.0)
+            self._thread = None
+        for w in self._workers:
+            w.shutdown()
+        self._wake_r.close()
+        self._wake_w.close()
+
+    # -- one multiplexer step ---------------------------------------------
+
+    def _settle(self, task: MapTask, out: Optional[Dict],
+                failure: Optional[Dict], now: float) -> None:
         task.map_time_s += (out or {}).get("map_time_s", 0.0)
         if out is not None and "result" in out:
-            outcome = _finalize(task, out)
-            outcomes[task.key] = outcome
-            if on_outcome is not None:
-                on_outcome(task.key, outcome)
+            self._finish_task(task, _finalize(task, out))
             return
         fail = failure if failure is not None else (out or {}).get("failure")
         if fail is None:  # defensive: a malformed worker answer
             fail = failure_record(FailureKind.WORKER_CRASH, "map",
                                   message="malformed worker answer",
                                   attempt=task.attempt)
-        if _advance(task, fail, rcfg, now):
-            heapq.heappush(ready, (task.not_before, seq, task))
-            seq += 1
+        if _advance(task, fail, self.rcfg, now):
+            with self._lock:
+                self._push(task)
         else:
-            outcome = _finalize(task, None)
-            outcomes[task.key] = outcome
-            if on_outcome is not None:
-                on_outcome(task.key, outcome)
+            self._finish_task(task, _finalize(task, None))
+
+    def _finish_task(self, task: MapTask, outcome: Dict) -> None:
+        with self._lock:
+            cb = self._callbacks.pop(id(task), None)
+            self._pending -= 1
+            if self._pending == 0:
+                self._idle.notify_all()
+        if cb is not None:
+            cb(task.key, outcome)
+
+    def _respawn(self, w) -> None:
+        idx = self._workers.index(w)
+        others = self._workers[:idx] + self._workers[idx + 1:]
+        self._workers[idx] = self._new_worker(others)
+
+    def _step(self, max_block_s: float = 0.5) -> None:
+        now = time.monotonic()
+        # assign eligible tasks to idle slots
+        with self._lock:
+            for w in self._workers:
+                if w.busy or not self._ready:
+                    continue
+                if self._ready[0][0] > now:
+                    break
+                task = heapq.heappop(self._ready)[3]
+                w.assign(task, self.rcfg, now)
+        busy = [w for w in self._workers if w.busy]
+        # how long may we block? until the nearest deadline or the
+        # nearest backoff-eligibility, capped for responsiveness
+        timeout = max_block_s
+        for w in busy:
+            if w.deadline_at is not None:
+                timeout = min(timeout, max(w.deadline_at - now, 0.0))
+        with self._lock:
+            if self._ready and any(not w.busy for w in self._workers):
+                timeout = min(timeout, max(self._ready[0][0] - now, 0.0))
+        conns = [w.conn for w in busy] + [self._wake_r]
+        for conn in _conn_wait(conns, timeout):
+            if conn is self._wake_r:
+                try:
+                    while self._wake_r.poll(0):
+                        self._wake_r.recv_bytes()
+                except (EOFError, OSError):  # pragma: no cover
+                    pass
+                continue
+            w = next(x for x in busy if x.conn is conn)
+            task = w.task
+            try:
+                task_id, out = conn.recv()
+            except (EOFError, OSError):
+                # the worker died under the task: classify and heal
+                if not self.inline:
+                    w.proc.join(timeout=5.0)
+                kind = _classify_exitcode(w.exitcode)
+                fail = failure_record(
+                    kind, "map", attempt=task.attempt,
+                    message=f"worker exited with code {w.exitcode}")
+                w.conn.close()  # before the respawn fork: no leak
+                self._respawn(w)
+                self._settle(task, None, fail, time.monotonic())
+                continue
+            if task_id != task.attempt_id():
+                continue  # stale answer from a pre-kill attempt
+            w.task, w.deadline_at = None, None
+            self._settle(task, out, None, time.monotonic())
+        # parent-side deadline enforcement: kill + recycle + requeue
+        now = time.monotonic()
+        for w in list(self._workers):
+            if not w.busy or w.deadline_at is None or now < w.deadline_at:
+                continue
+            task = w.task
+            w.kill()  # closes the pipe before the respawn fork
+            self._respawn(w)
+            fail = failure_record(
+                FailureKind.DEADLINE, "map", attempt=task.attempt,
+                message=(f"worker killed after exceeding the "
+                         f"{task.deadline_s(self.rcfg):.1f}s point deadline"))
+            self._settle(task, None, fail, now)
+
+
+def run_supervised(tasks: List[MapTask], jobs: int,
+                   rcfg: Optional[ResilienceConfig] = None,
+                   on_outcome: Optional[Callable[[Any, Dict], None]] = None,
+                   ) -> Dict[Any, Dict]:
+    """Drive ``tasks`` through a self-healing worker fleet (batch
+    adapter over :class:`WorkerPool`).
+
+    Returns ``{task.key: outcome}``; ``on_outcome`` additionally fires in
+    completion order (journaling hook).  Never raises for per-point
+    failures — every task terminates with a result or a typed failure.
+    """
+    outcomes: Dict[Any, Dict] = {}
+    pool = WorkerPool(jobs=max(1, min(jobs, len(tasks))), rcfg=rcfg)
+
+    def record(key: Any, outcome: Dict) -> None:
+        outcomes[key] = outcome
+        if on_outcome is not None:
+            on_outcome(key, outcome)
 
     try:
-        for _ in range(n):
-            workers.append(_Worker(ctx, peers=workers))
-        while len(outcomes) < len(tasks):
-            now = time.monotonic()
-            # assign eligible tasks to idle slots
-            for w in workers:
-                if w.busy or not ready:
-                    continue
-                if ready[0][0] > now:
-                    continue
-                _, _, task = heapq.heappop(ready)
-                w.assign(task, rcfg, now)
-            busy = [w for w in workers if w.busy]
-            # how long may we block? until the nearest deadline or the
-            # nearest backoff-eligibility, capped for responsiveness
-            timeout = 0.5
-            for w in busy:
-                if w.deadline_at is not None:
-                    timeout = min(timeout, max(w.deadline_at - now, 0.0))
-            if ready and not all(w.busy for w in workers):
-                timeout = min(timeout, max(ready[0][0] - now, 0.0))
-            if not busy:
-                if ready:
-                    time.sleep(min(timeout, 0.05)
-                               if ready[0][0] <= now else timeout)
-                continue
-            for conn in _conn_wait([w.conn for w in busy], timeout):
-                w = next(x for x in busy if x.conn is conn)
-                task = w.task
-                try:
-                    task_id, out = conn.recv()
-                except (EOFError, OSError):
-                    # the worker died under the task: classify and heal
-                    w.proc.join(timeout=5.0)
-                    kind = _classify_exitcode(w.proc.exitcode)
-                    fail = failure_record(
-                        kind, "map", attempt=task.attempt,
-                        message=(f"worker exited with code "
-                                 f"{w.proc.exitcode}"))
-                    w.conn.close()  # before the respawn fork: no leak
-                    idx = workers.index(w)
-                    others = workers[:idx] + workers[idx + 1:]
-                    workers[idx] = _Worker(ctx, peers=others)
-                    settle(task, None, fail, time.monotonic())
-                    continue
-                if task_id != task.attempt_id():
-                    continue  # stale answer from a pre-kill attempt
-                w.task, w.deadline_at = None, None
-                settle(task, out, None, time.monotonic())
-            # parent-side deadline enforcement: kill + recycle + requeue
-            now = time.monotonic()
-            for w in list(workers):
-                if not w.busy or w.deadline_at is None or now < w.deadline_at:
-                    continue
-                task = w.task
-                w.kill()  # closes the pipe before the respawn fork
-                idx = workers.index(w)
-                others = workers[:idx] + workers[idx + 1:]
-                workers[idx] = _Worker(ctx, peers=others)
-                fail = failure_record(
-                    FailureKind.DEADLINE, "map", attempt=task.attempt,
-                    message=(f"worker killed after exceeding the "
-                             f"{task.deadline_s(rcfg):.1f}s point deadline"))
-                settle(task, None, fail, now)
+        for t in tasks:
+            pool.submit(t, record)
+        pool.drain()
     finally:
-        for w in workers:
-            w.shutdown()
+        pool.shutdown()
     return outcomes
 
 

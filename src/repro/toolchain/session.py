@@ -236,13 +236,25 @@ class Toolchain:
         self.last_cache_hit = hit
         return res
 
+    def _oracle_active(self, prog: Program) -> bool:
+        """Whether the session's CEGAR oracle applies to ``prog`` — the
+        cache-key question, answered without building the per-mapping
+        check closure (cheap enough to ask once per request/point).
+        Custom factories may veto per program, so they are still built
+        to answer; the stock assembler oracle never is."""
+        if self._oracle_factory is None or prog.builder is None:
+            return False
+        if self._oracle_factory is assembler_oracle:
+            # diagonal / one-hop interconnects cannot be assembled, so the
+            # codegen oracle has nothing to say (map-only architectures)
+            return self.grid.assemblable
+        return self._oracle_check(prog) is not None
+
     def _oracle_check(self, prog: Program):
         if self._oracle_factory is None or prog.builder is None:
             return None
         if (self._oracle_factory is assembler_oracle
                 and not self.grid.assemblable):
-            # diagonal / one-hop interconnects cannot be assembled, so the
-            # codegen oracle has nothing to say (map-only architectures)
             return None
         check = self._oracle_factory(prog.builder)
         # the portfolio racer needs a *picklable* recipe for this oracle
@@ -261,6 +273,15 @@ class Toolchain:
     def _cache_key(self, prog: Program, cfg: MapperConfig, oracled: bool) -> str:
         extra = self.oracle_tag if oracled else ""
         return mapping_cache_key(prog.dfg, self.grid, cfg, extra=extra)
+
+    def cache_key(self, source, config: Optional[MapperConfig] = None) -> str:
+        """Content-addressed identity of the map stage for ``source``
+        under this session (DFG + arch + config + oracle tag) — the key
+        the on-disk mapping cache and the compile server's in-flight
+        dedup share."""
+        prog = self.program(source)
+        cfg = config or self.config
+        return self._cache_key(prog, cfg, oracled=self._oracle_active(prog))
 
     def _map_cached(
         self,
@@ -488,6 +509,11 @@ class Toolchain:
         grid_list = [resolve_arch(g) for g in grids]
         sessions = [self._sibling(g, src) for g, src in zip(grid_list, grids)]
         programs = {k: self.program(k) for k in kernels}
+        # oracle applicability is a pure (program, grid) property: resolve
+        # it once per (kernel, grid) pair at batch setup instead of
+        # rebuilding the oracle closure per point and per fleet assignment
+        oracle_on = {(k, gi): sessions[gi]._oracle_active(programs[k])
+                     for k in kernels for gi in range(len(grid_list))}
         all_points: List[PointKey] = [(k, gi) for k in kernels
                                       for gi in range(len(grid_list))]
         if points is None:
@@ -511,8 +537,7 @@ class Toolchain:
             if self.cache is None:
                 pending.append(pt)
                 continue
-            check = tc._oracle_check(prog)
-            keys[pt] = tc._cache_key(prog, cfg, oracled=check is not None)
+            keys[pt] = tc._cache_key(prog, cfg, oracled=oracle_on[pt])
             stored, state = self._cache_lookup(keys[pt])
             if stored is None:
                 if state == "corrupt":
@@ -522,23 +547,8 @@ class Toolchain:
                                  f"{keys[pt][:12]}; re-solving"))
                 pending.append(pt)
                 continue
-            res = MapResult.from_dict(prog.dfg, tc.grid, stored)
-            self._publish_facts(tc, prog, res)
-            cr = CompileResult(
-                kernel=kernel,
-                rows=tc.grid.spec.rows,
-                cols=tc.grid.spec.cols,
-                status="error",
-                arch=tc.arch,
-                program=prog,
-                map_result=res,
-                cache_hit=True,
-                timings={"map": 0.0},
-            )
-            if res.mapping is None:
-                cr.status, cr.stage = res.status, "map"
-            else:
-                cr = tc._finish(cr)
+            cr = tc.result_from_cache(prog, stored)
+            self._publish_facts(tc, prog, cr.map_result)
             done[pt] = cr
             if on_result is not None:
                 on_result(pt, cr)
@@ -560,14 +570,12 @@ class Toolchain:
                     from ..core.facts import seed_to_jsonable
 
                     tc, prog = sessions[pt[1]], programs[pt[0]]
+                    extra = self.oracle_tag if oracle_on[pt] else ""
 
-                    def provider(tc=tc, prog=prog):
+                    def provider(tc=tc, prog=prog, extra=extra):
                         # late-bound: runs at *assign* time in the parent,
                         # so facts published by already-finished siblings
                         # reach every point still in the queue
-                        extra = (self.oracle_tag
-                                 if tc._oracle_check(prog) is not None
-                                 else "")
                         return seed_to_jsonable(
                             self.facts.lift(prog.dfg, tc.grid, extra))
 
@@ -597,8 +605,7 @@ class Toolchain:
         (no-op without one)."""
         if self.facts is None or res is None:
             return
-        extra = (self.oracle_tag
-                 if tc._oracle_check(prog) is not None else "")
+        extra = self.oracle_tag if tc._oracle_active(prog) else ""
         self.facts.publish(prog.dfg, tc.grid, extra, res)
 
     def _cache_lookup(self, key: str):
@@ -610,6 +617,77 @@ class Toolchain:
         stored = self.cache.get(key)
         return stored, ("hit" if stored is not None else "miss")
 
+    def result_from_cache(self, prog: Program, stored: Dict) -> CompileResult:
+        """A stored map-stage cache entry -> a finished
+        :class:`CompileResult` (post-map stages run now, in this
+        process).  Fact publishing stays with the caller — the store
+        usually lives on a parent session."""
+        res = MapResult.from_dict(prog.dfg, self.grid, stored)
+        cr = CompileResult(
+            kernel=prog.name,
+            rows=self.grid.spec.rows,
+            cols=self.grid.spec.cols,
+            status="error",
+            arch=self.arch,
+            program=prog,
+            map_result=res,
+            cache_hit=True,
+            timings={"map": 0.0},
+        )
+        if res.mapping is None:
+            cr.status, cr.stage = res.status, "map"
+            return cr
+        return self._finish(cr)
+
+    def result_from_outcome(
+        self,
+        prog: Program,
+        outcome: Dict,
+        cache_key: Optional[str] = None,
+        corrupt_note: Optional[Dict] = None,
+    ) -> CompileResult:
+        """One fleet outcome (:func:`~repro.toolchain.resilience.run_supervised`
+        / :class:`~repro.toolchain.resilience.WorkerPool`) -> a finished
+        :class:`CompileResult`, with the parent-side cache write
+        (terminal, non-degraded verdicts only, when ``cache_key`` is
+        given) and the post-map stages.  Shared by ``compile_many`` and
+        the ``repro.serve`` compile server."""
+        cr = CompileResult(
+            kernel=prog.name,
+            rows=self.grid.spec.rows,
+            cols=self.grid.spec.cols,
+            status="error",
+            arch=self.arch,
+            program=prog,
+            timings={"map": outcome.get("map_time_s", 0.0)},
+        )
+        cr.retries = max(outcome.get("attempts", 1) - 1, 0)
+        cr.degraded = outcome.get("degraded")
+        cr.failure = outcome.get("failure") or corrupt_note
+        if "result" not in outcome:
+            cr.status = "failed"
+            cr.stage = (cr.failure or {}).get("stage", "map")
+            cr.error = failure_text(cr.failure)
+            return cr
+        res = MapResult.from_dict(prog.dfg, self.grid, outcome["result"])
+        cr.map_result = res
+        if (self.cache is not None and cache_key is not None
+                and cr.degraded is None
+                and res.status in TERMINAL_MAP_STATUSES
+                # a fact-seeded solve is session-context-dependent: the
+                # content-addressed key cannot see the seed, so the entry
+                # must not be stored (mirrors map_dfg_cached)
+                and not res.facts_used):
+            self.cache.put(cache_key, outcome["result"])
+            spec = chaos.active()
+            if (spec is not None and spec.decide(
+                    prog.name, _arch_key(self.grid), 0) == "cache-corrupt"):
+                chaos.corrupt_file(self.cache._path(cache_key))
+        if res.mapping is None:
+            cr.status, cr.stage = res.status, "map"
+            return cr
+        return self._finish(cr)
+
     def _result_from_outcome(
         self,
         pt: PointKey,
@@ -619,47 +697,16 @@ class Toolchain:
         keys: Dict[PointKey, str],
         corrupt_notes: Dict[PointKey, Dict],
     ) -> CompileResult:
-        """One fleet outcome -> a finished :class:`CompileResult`, with
-        the parent-side cache write (terminal, non-degraded verdicts
-        only) and the post-map stages."""
+        """``compile_many``'s per-point adapter over
+        :meth:`result_from_outcome` (sibling-session routing + the
+        parent-owned fact store)."""
         kernel, gi = pt
         tc = sessions[gi]
         prog = programs[kernel]
-        cr = CompileResult(
-            kernel=kernel,
-            rows=tc.grid.spec.rows,
-            cols=tc.grid.spec.cols,
-            status="error",
-            arch=tc.arch,
-            program=prog,
-            timings={"map": outcome.get("map_time_s", 0.0)},
-        )
-        cr.retries = max(outcome.get("attempts", 1) - 1, 0)
-        cr.degraded = outcome.get("degraded")
-        cr.failure = outcome.get("failure") or corrupt_notes.get(pt)
-        if "result" not in outcome:
-            cr.status = "failed"
-            cr.stage = (cr.failure or {}).get("stage", "map")
-            cr.error = failure_text(cr.failure)
-            return cr
-        res = MapResult.from_dict(prog.dfg, tc.grid, outcome["result"])
-        cr.map_result = res
-        self._publish_facts(tc, prog, res)
-        if (self.cache is not None and cr.degraded is None
-                and res.status in TERMINAL_MAP_STATUSES
-                # a fact-seeded solve is session-context-dependent: the
-                # content-addressed key cannot see the seed, so the entry
-                # must not be stored (mirrors map_dfg_cached)
-                and not res.facts_used):
-            self.cache.put(keys[pt], outcome["result"])
-            spec = chaos.active()
-            if (spec is not None and spec.decide(
-                    kernel, _arch_key(tc.grid), 0) == "cache-corrupt"):
-                chaos.corrupt_file(self.cache._path(keys[pt]))
-        if res.mapping is None:
-            cr.status, cr.stage = res.status, "map"
-            return cr
-        return tc._finish(cr)
+        cr = tc.result_from_outcome(prog, outcome, cache_key=keys.get(pt),
+                                    corrupt_note=corrupt_notes.get(pt))
+        self._publish_facts(tc, prog, cr.map_result)
+        return cr
 
     def _sibling(self, grid: PEGrid, source: ArchLike = None) -> "Toolchain":
         """Same session settings over a different grid (shared cache).

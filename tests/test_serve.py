@@ -1,0 +1,474 @@
+"""Mapping-as-a-service: wire protocol (versioned schema, golden
+fixtures), server-side bookkeeping (in-flight dedup, tenant budgets),
+the asyncio compile server end to end over TCP and stdio, and the
+deprecation shims of the CLI unification.
+
+Solving runs on the dependency-free CDCL backend over 2x2 grids with
+``inline=True`` worker threads, so the whole module stays inside tier-1
+time budgets."""
+
+import asyncio
+import json
+import os
+import subprocess
+import sys
+import threading
+
+import pytest
+
+from repro.core import MapperConfig
+from repro.core.dfg import running_example
+from repro.serve import (
+    CompileRequest,
+    CompileServer,
+    InflightCompiles,
+    ProtocolError,
+    ServeClient,
+    ServeError,
+    ServeStats,
+    TenantBudgets,
+    request_sync,
+    wire_source,
+)
+from repro.serve.protocol import decode, encode
+from repro.toolchain import CompileResult, Toolchain
+from repro.toolchain.artifacts import WireMapResult
+
+CDCL = MapperConfig(backend="cdcl", per_ii_timeout_s=10.0,
+                    total_timeout_s=30.0)
+
+FIXTURES = os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                        "fixtures")
+SRC_DIR = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src")
+
+# summary() keys that legitimately differ between service paths (a
+# cache replay flips cache_hit, wall times move) — everything else is
+# the correctness projection that must be identical
+VOLATILE = ("stage_times_s", "cache_hit", "cancelled_after_s")
+
+
+def _projection(summary):
+    return {k: v for k, v in summary.items() if k not in VOLATILE}
+
+
+def _canon(doc):
+    return json.dumps(doc, sort_keys=True, separators=(",", ":"))
+
+
+# ---------------------------------------------------------------------------
+# protocol: schema, encode/decode, golden fixtures
+# ---------------------------------------------------------------------------
+
+
+def test_encode_decode_round_trip_and_errors():
+    msg = {"type": "compile", "request_id": "r1", "b": [1, None]}
+    assert decode(encode(msg)) == msg
+    assert encode(msg).endswith(b"\n")
+    with pytest.raises(ProtocolError):
+        decode(b"not json\n")
+    with pytest.raises(ProtocolError):
+        decode(b"[1, 2]\n")  # frames must be objects
+
+
+def test_wire_source_lowers_every_source_kind():
+    assert wire_source("bitcount") == "bitcount"
+    dfg = running_example()
+    d = wire_source(dfg)
+    assert d == dfg.to_dict() and wire_source(d) == d
+    with pytest.raises(ProtocolError):
+        wire_source(42)
+
+
+def test_compile_request_round_trip_and_version_gate():
+    req = CompileRequest(source="bitcount", arch="2x2",
+                         config={"ii_max": 8}, strategy=None, priority=3,
+                         tenant="alice", request_id="r9")
+    back = CompileRequest.from_dict(json.loads(json.dumps(req.to_dict())))
+    assert back == req
+    bad = dict(req.to_dict(), v=99)
+    with pytest.raises(ProtocolError, match="version"):
+        CompileRequest.from_dict(bad)
+
+
+def test_mapper_config_merge_and_strategy_override():
+    base = MapperConfig(backend="cdcl", ii_max=32)
+    req = CompileRequest(source="bitcount", config={"ii_max": 8})
+    cfg = req.mapper_config(base)
+    assert cfg.backend == "cdcl" and cfg.ii_max == 8
+    raced = CompileRequest(source="bitcount",
+                           strategy="portfolio:cdcl-seq+cdcl-pair")
+    rcfg = raced.mapper_config(base)
+    assert rcfg.strategy == "portfolio:cdcl-seq+cdcl-pair"
+    assert rcfg.backend == "auto" and rcfg.amo is None
+    with pytest.raises(ProtocolError, match="unknown MapperConfig"):
+        CompileRequest(source="bitcount",
+                       config={"nope": 1}).mapper_config(base)
+
+
+def test_golden_request_fixture_round_trips():
+    # the committed wire frame must keep parsing (schema stability) and
+    # re-serialize byte-identically (no silent field drift)
+    with open(os.path.join(FIXTURES, "wire_compile_request.json")) as fh:
+        fixture = json.load(fh)
+    req = CompileRequest.from_dict(fixture)
+    assert _canon(req.to_dict()) == _canon(fixture)
+    assert req == CompileRequest(
+        source=fixture["source"], arch=fixture["arch"],
+        config=fixture["config"], strategy=fixture["strategy"],
+        priority=fixture["priority"], tenant=fixture["tenant"],
+        request_id=fixture["request_id"])
+
+
+def test_golden_result_fixture_round_trips():
+    # both directions of the result schema: the committed to_dict()
+    # document revives context-free, re-serializes byte-identically and
+    # yields the committed digest
+    with open(os.path.join(FIXTURES, "wire_compile_result.json")) as fh:
+        fixture = json.load(fh)
+    cr = CompileResult.from_dict(fixture["result"])
+    assert _canon(cr.to_dict()) == _canon(fixture["result"])
+    assert cr.summary() == fixture["summary"]
+    assert isinstance(cr.map_result, WireMapResult)
+    assert cr.mapping.utilization == fixture["summary"]["utilization"]
+
+
+def test_golden_result_fixture_matches_fresh_compile():
+    with open(os.path.join(FIXTURES, "wire_compile_result.json")) as fh:
+        fixture = json.load(fh)
+    cr = Toolchain("2x2", CDCL).compile("bitcount")
+    assert _projection(cr.summary()) == _projection(fixture["summary"])
+
+
+# ---------------------------------------------------------------------------
+# queue bookkeeping
+# ---------------------------------------------------------------------------
+
+
+def test_inflight_coalescing_bookkeeping():
+    inflight = InflightCompiles()
+    assert inflight.join("k1", "a") is True  # leader
+    assert inflight.join("k1", "b") is False
+    assert inflight.join("k2", "c") is True
+    assert inflight.depth("k1") == 2 and len(inflight) == 2
+    assert inflight.pop("k1") == ["a", "b"]
+    assert inflight.pop("k1") == [] and len(inflight) == 1
+
+
+def test_tenant_budgets_admit_release():
+    budgets = TenantBudgets(2)
+    assert budgets.admit("a") and budgets.admit("a")
+    assert not budgets.admit("a")  # at budget
+    assert budgets.admit("b")  # budgets are per-tenant
+    budgets.release("a")
+    assert budgets.admit("a")
+    assert budgets.snapshot() == {"a": 2, "b": 1}
+    unlimited = TenantBudgets(None)
+    assert all(unlimited.admit("x") for _ in range(100))
+
+
+def test_serve_stats_snapshot():
+    stats = ServeStats()
+    stats.received += 3
+    stats.compiled += 1
+    stats.coalesced += 2
+    assert stats.snapshot() == {
+        "received": 3, "compiled": 1, "cache_hits": 0, "coalesced": 2,
+        "rejected": 0, "errors": 0}
+
+
+# ---------------------------------------------------------------------------
+# the server end to end (in-process TCP)
+# ---------------------------------------------------------------------------
+
+
+async def _with_server(body, **server_kw):
+    server_kw.setdefault("inline", True)
+    server = CompileServer("2x2", CDCL, **server_kw)
+    try:
+        host, port = await server.start()
+        client = await ServeClient.connect(host, port)
+        try:
+            return await body(server, client)
+        finally:
+            await client.close()
+    finally:
+        server.close()
+
+
+def test_server_result_matches_direct_toolchain_compile(tmp_path):
+    # the acceptance contract: a served result is byte-identical in
+    # correctness projection to the same compile run directly
+    async def body(server, client):
+        cr, served = await client.compile("bitcount", arch="2x2")
+        assert served == "compiled"
+        return cr
+
+    cr = asyncio.run(_with_server(body))
+    direct = Toolchain("2x2", CDCL).compile("bitcount")
+    assert _projection(cr.summary()) == _projection(direct.summary())
+    assert cr.ok and cr.ii == direct.ii
+
+
+def test_concurrent_identical_requests_coalesce(monkeypatch):
+    # N identical concurrent requests -> exactly one mapper invocation,
+    # N identical results.  The (counted) solver blocks until every
+    # request has joined the in-flight group, so coalescing is proven
+    # deterministically, not raced.
+    from repro.toolchain import resilience
+    real = resilience._run_map_payload
+    calls = []
+    release = threading.Event()
+
+    def counting(payload, inline=False, cancel=None):
+        calls.append(payload["kernel"])
+        release.wait(timeout=30)
+        return real(payload, inline=inline, cancel=cancel)
+
+    monkeypatch.setattr(resilience, "_run_map_payload", counting)
+    N = 5
+
+    async def body(server, client):
+        tasks = [asyncio.ensure_future(client.compile("bitcount"))
+                 for _ in range(N)]
+        for _ in range(500):
+            if (len(server.inflight) == 1
+                    and server.inflight.depth(
+                        next(iter(server.inflight._waiters))) == N):
+                break
+            await asyncio.sleep(0.01)
+        else:
+            pytest.fail("requests never coalesced onto one key")
+        release.set()
+        out = await asyncio.gather(*tasks)
+        assert server.mapper_invocations == 1
+        assert sorted(s for _, s in out) == \
+            ["coalesced"] * (N - 1) + ["compiled"]
+        projections = {_canon(_projection(cr.summary())) for cr, _ in out}
+        assert len(projections) == 1
+        stats = await client.stats()
+        assert stats["serving"]["received"] == N
+        assert stats["serving"]["compiled"] == 1
+        assert stats["serving"]["coalesced"] == N - 1
+        return None
+
+    asyncio.run(_with_server(body, jobs=2))
+    assert calls == ["bitcount"]
+
+
+def test_high_priority_jumps_the_low_priority_flood(monkeypatch):
+    # with one worker slot, a flood of queued low-priority work may cost
+    # a high-priority request at most the one compile already in flight
+    from repro.toolchain import resilience
+    real = resilience._run_map_payload
+    calls = []
+    gate = threading.Semaphore(0)
+
+    def gated(payload, inline=False, cancel=None):
+        calls.append(payload["cfg"]["ii_max"])
+        gate.acquire()
+        return real(payload, inline=inline, cancel=cancel)
+
+    monkeypatch.setattr(resilience, "_run_map_payload", gated)
+    lows = [8, 9, 10, 11]  # distinct ii_max -> distinct cache keys
+    high = 30
+
+    async def body(server, client):
+        tasks = [asyncio.ensure_future(client.compile(
+            "bitcount", config={"ii_max": m}, priority=0)) for m in lows]
+        for _ in range(500):  # first low must occupy the only slot
+            if calls:
+                break
+            await asyncio.sleep(0.01)
+        assert calls == [lows[0]]
+        tasks.append(asyncio.ensure_future(client.compile(
+            "bitcount", config={"ii_max": high}, priority=5)))
+        for _ in range(500):  # the late request must be enqueued
+            if server.inflight.depth(
+                    next(iter(reversed(server.inflight._waiters)))):
+                break
+            await asyncio.sleep(0.01)
+        for _ in range(len(lows) + 1):
+            gate.release()
+        out = await asyncio.gather(*tasks)
+        assert all(cr.ok for cr, _ in out)
+        return None
+
+    asyncio.run(_with_server(body, jobs=1))
+    # the high-priority compile ran right after the one in flight
+    assert calls[0] == lows[0] and calls[1] == high
+    assert sorted(calls[2:]) == sorted(lows[1:])
+
+
+def test_duplicate_after_completion_is_served_from_cache(tmp_path):
+    async def body(server, client):
+        first, served1 = await client.compile("bitcount")
+        second, served2 = await client.compile("bitcount")
+        assert (served1, served2) == ("compiled", "cache")
+        assert server.mapper_invocations == 1
+        assert second.cache_hit and not first.cache_hit
+        assert _projection(second.summary()) == \
+            _projection(first.summary())
+        stats = await client.stats()
+        assert stats["serving"]["cache_hits"] == 1
+        assert stats["cache"]["hits"] == 1
+        return None
+
+    asyncio.run(_with_server(body, cache=str(tmp_path / "cache")))
+
+
+def test_tenant_budget_rejects_excess_inflight(monkeypatch):
+    from repro.toolchain import resilience
+    real = resilience._run_map_payload
+    release = threading.Event()
+
+    def blocking(payload, inline=False, cancel=None):
+        release.wait(timeout=30)
+        return real(payload, inline=inline, cancel=cancel)
+
+    monkeypatch.setattr(resilience, "_run_map_payload", blocking)
+
+    async def body(server, client):
+        first = asyncio.ensure_future(
+            client.compile("bitcount", tenant="alice"))
+        for _ in range(500):
+            if len(server.inflight):
+                break
+            await asyncio.sleep(0.01)
+        # same tenant over budget -> typed rejection; others unaffected
+        with pytest.raises(ServeError, match="admission budget"):
+            await client.compile("reversebits", tenant="alice")
+        other = asyncio.ensure_future(
+            client.compile("reversebits", tenant="bob"))
+        release.set()
+        (cr1, _), (cr2, _) = await asyncio.gather(first, other)
+        assert cr1.ok and cr2.ok
+        stats = await client.stats()
+        assert stats["serving"]["rejected"] == 1
+        # budgets drain once answered: alice can compile again
+        cr3, served = await client.compile("bitcount", tenant="alice")
+        assert cr3.ok and served == "compiled"
+        return None
+
+    asyncio.run(_with_server(body, tenant_budget=1))
+
+
+def test_unknown_kernel_is_a_typed_error_not_a_crash():
+    async def body(server, client):
+        with pytest.raises(ServeError, match="unknown kernel"):
+            await client.compile("no_such_kernel")
+        resp = await client.submit("no_such_kernel")
+        assert resp["type"] == "error"
+        stats = await client.stats()
+        assert stats["serving"]["errors"] == 2
+        cr, _ = await client.compile("bitcount")  # connection survives
+        assert cr.ok
+        return None
+
+    asyncio.run(_with_server(body))
+
+
+def test_bare_dfg_request_keeps_toolchain_semantics():
+    # a wire DFG is map-only: same contract as Toolchain.compile(dfg) —
+    # the mapping rides on map_result, status records the assemble stop
+    async def body(server, client):
+        cr, served = await client.compile(running_example(), arch="2x2")
+        assert served == "compiled"
+        return cr
+
+    cr = asyncio.run(_with_server(body))
+    direct = Toolchain("2x2", CDCL).compile(running_example())
+    assert cr.status == "error" and cr.stage == "assemble"
+    assert cr.map_result.status == "mapped"
+    assert cr.ii == direct.ii
+    assert _projection(cr.summary()) == _projection(direct.summary())
+
+
+def test_request_sync_and_server_shutdown(tmp_path):
+    started = threading.Event()
+    info = {}
+
+    def serve():
+        async def go():
+            server = CompileServer("2x2", CDCL, inline=True,
+                                   cache=str(tmp_path / "cache"))
+            try:
+                host, port = await server.start()
+                info.update(host=host, port=port)
+                started.set()
+                await server.wait_closed()
+            finally:
+                server.close()
+
+        asyncio.run(go())
+
+    t = threading.Thread(target=serve, daemon=True)
+    t.start()
+    assert started.wait(20)
+    resp = request_sync("bitcount", info["host"], info["port"])
+    assert resp["type"] == "result" and resp["served"] == "compiled"
+    cr = CompileResult.from_dict(resp["result"])
+    assert cr.ok
+    resp2 = request_sync("bitcount", info["host"], info["port"],
+                         shutdown=True)
+    assert resp2["served"] == "cache"
+    t.join(timeout=20)
+    assert not t.is_alive()
+
+
+# ---------------------------------------------------------------------------
+# CLI integration: stdio serving, deprecation shims
+# ---------------------------------------------------------------------------
+
+
+def _env():
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC_DIR + os.pathsep + env.get("PYTHONPATH", "")
+    return env
+
+
+def test_serve_stdio_subprocess_end_to_end():
+    async def go():
+        proc = await asyncio.create_subprocess_exec(
+            sys.executable, "-m", "repro", "serve", "--stdio",
+            "--arch", "2x2", "--backend", "cdcl", "--inline",
+            "--jobs", "1", "--timeout", "30",
+            stdin=asyncio.subprocess.PIPE, stdout=asyncio.subprocess.PIPE,
+            stderr=asyncio.subprocess.DEVNULL, env=_env())
+        try:
+            client = await ServeClient.over_streams(proc.stdout,
+                                                    proc.stdin)
+            assert client.hello["arch"] == "2x2"
+            cr, served = await client.compile("bitcount", arch="2x2")
+            assert cr.ok and served == "compiled"
+            await client.shutdown()
+            await client.close()
+            await asyncio.wait_for(proc.wait(), timeout=30)
+            assert proc.returncode == 0
+        finally:
+            if proc.returncode is None:
+                proc.kill()
+                await proc.wait()
+
+    asyncio.run(asyncio.wait_for(go(), timeout=120))
+
+
+@pytest.mark.parametrize("module,canonical", [
+    ("repro.dse", "sweep"),
+    ("repro.frontend", "cosim"),
+])
+def test_deprecated_entry_points_warn_and_forward(module, canonical):
+    # the shim warns but forwards verbatim to the canonical subcommand
+    out = subprocess.run(
+        [sys.executable, "-m", module, "--help"],
+        capture_output=True, text=True, env=_env(), timeout=60)
+    assert out.returncode == 0
+    assert "deprecated" in out.stderr
+    assert f"python -m repro {canonical}" in out.stderr
+    # escalating the warning blocks the run before any work happens
+    hard = subprocess.run(
+        [sys.executable, "-W", "error::DeprecationWarning", "-m", module,
+         "--help"], capture_output=True, text=True, env=_env(),
+        timeout=60)
+    assert hard.returncode != 0
+    assert "DeprecationWarning" in hard.stderr

@@ -172,10 +172,22 @@ def test_compile_result_round_trip():
     assert np.array_equal(asm.words(), cr.asm.words())
 
 
-def test_compile_result_from_dict_needs_context_for_mapping():
-    cr = Toolchain("2x2", CDCL).compile("bitcount")
-    with pytest.raises(ValueError):
-        CompileResult.from_dict(cr.to_dict())
+def test_compile_result_from_dict_without_context_is_lossless():
+    # the wire contract (repro.serve): no local DFG/grid, yet the revived
+    # result re-serializes byte-identically and its digest matches
+    tc = Toolchain("2x2", CDCL)
+    cr = tc.compile("bitcount")
+    d = json.loads(json.dumps(cr.to_dict()))
+    back = CompileResult.from_dict(d)
+    assert json.dumps(back.to_dict(), sort_keys=True) == \
+        json.dumps(cr.to_dict(), sort_keys=True)
+    assert back.summary() == cr.summary()
+    assert back.ii == cr.ii and back.mii == cr.mii
+    assert back.mapping.utilization == cr.mapping.utilization
+    # reattaching context upgrades the view to a full MapResult/Mapping
+    revived = back.map_result.revive(cr.program.dfg, tc.grid)
+    assert revived.mapping.placements.keys() == \
+        cr.mapping.placements.keys()
 
 
 # ---------------------------------------------------------------------------
