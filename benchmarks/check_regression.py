@@ -22,7 +22,16 @@ Three artifact shapes are understood:
   are joined on (kernel, arch); per-point status/II/mII and the dedup
   contract (compiles == unique points, duplicate results identical,
   deterministic cache-hit ratio) are hard, throughput/latency
-  percentiles are tolerance-gated.
+  percentiles are tolerance-gated;
+* ``python -m repro fuzz --out`` documents (``bench: "fuzz"``) —
+  results are joined on (kernel, arch); status/II/failing indices,
+  the activity-based energy delta and the first-divergence record are
+  hard (the whole pipeline is seeded and bit-exact), memories/sec is
+  tolerance-gated;
+* ``benchmarks/fuzz_throughput.py`` documents
+  (``bench: "fuzz_throughput"``) — rows are joined on kernel; the
+  sequential-vs-batched verdict agreement is hard, all three rates and
+  the derived speedups are tolerance-gated.
 
 ``--assert-identical`` additionally serializes the *correctness
 projection* of both sides (every machine-independent field, canonical
@@ -77,6 +86,22 @@ SERVING_TOP_HARD = ("mode", "seed", "zipf_s", "arches", "kernels",
                     "duplicates", "identical_duplicates", "dedup_ok",
                     "cache_hit_ratio", "rejected", "errors")
 SERVING_TIME = ("throughput_rps", "p50_ms", "p99_ms", "wall_time_s")
+# fuzz verdicts are deterministic end to end (seeded corpus, fixed
+# mapping, bit-exact oracle): per-pair status/II/failing indices, the
+# energy delta and the first-divergence record are all hard; only the
+# memories/sec rates ride the wall clock
+FUZZ_HARD = ("status", "ii", "memories", "batch", "backend", "failing",
+             "energy", "divergence")
+FUZZ_TOP_HARD = ("archs", "kernels", "memories", "batch", "backend",
+                 "seed", "mismatches", "errors", "unmapped")
+FUZZ_TIME = ("map_time_s", "exec_time_s", "oracle_time_s", "mem_rate")
+FUZZTP_HARD = ("status", "ii", "arch", "memories", "batch", "failing",
+               "verdict_match", "stacked_failing",
+               "stacked_verdict_match")
+FUZZTP_TOP_HARD = ("arch", "memories", "batch", "seq_sample", "seed",
+                   "smoke")
+FUZZTP_TIME = ("seq_rate", "batched_rate", "stacked_rate",
+               "batched_speedup", "stacked_speedup")
 
 
 class Gate:
@@ -227,6 +252,55 @@ def check_serving(cur: Dict, base: Dict, gate: Gate) -> None:
         gate.timed("serving", f, c, b)
 
 
+def check_fuzz(cur: Dict, base: Dict, gate: Gate) -> None:
+    def ix(doc):
+        return {(p.get("kernel"), p.get("arch")): p
+                for p in doc.get("results", [])}
+    cur_ix, base_ix = ix(cur), ix(base)
+    missing = sorted(str(k) for k in set(base_ix) - set(cur_ix))
+    if missing:
+        gate.errors.append(f"fuzz: results missing: {missing}")
+    for key, b in base_ix.items():
+        c = cur_ix.get(key)
+        if c is None:
+            continue
+        where = "fuzz" + str(key)
+        for f in FUZZ_HARD:
+            if f in b:
+                gate.hard(where, f, c.get(f), b.get(f))
+        for f in FUZZ_TIME:
+            gate.timed(where, f, c.get(f), b.get(f))
+    for f in FUZZ_TOP_HARD:
+        if f in base:
+            gate.hard("fuzz", f, cur.get(f), base.get(f))
+
+
+def check_fuzz_throughput(cur: Dict, base: Dict, gate: Gate) -> None:
+    cur_ix = {r.get("kernel"): r for r in cur.get("rows", [])}
+    base_ix = {r.get("kernel"): r for r in base.get("rows", [])}
+    missing = sorted(str(k) for k in set(base_ix) - set(cur_ix))
+    if missing:
+        gate.errors.append(f"fuzz_throughput: rows missing: {missing}")
+    for key, b in base_ix.items():
+        c = cur_ix.get(key)
+        if c is None:
+            continue
+        where = f"fuzz_throughput({key})"
+        for f in FUZZTP_HARD:
+            if f in b:
+                gate.hard(where, f, c.get(f), b.get(f))
+        for f in FUZZTP_TIME:
+            gate.timed(where, f, c.get(f), b.get(f))
+    for f in FUZZTP_TOP_HARD:
+        if f in base:
+            gate.hard("fuzz_throughput", f, cur.get(f), base.get(f))
+    for f in ("verdicts_agree", "stacked_verdicts_agree", "ok",
+              "mismatch", "unsat_capped", "unmapped", "kernels"):
+        gate.hard("fuzz_throughput.summary", f,
+                  cur.get("summary", {}).get(f),
+                  base.get("summary", {}).get(f))
+
+
 def check_toolchain_map(cur: Dict, base: Dict, gate: Gate) -> None:
     where = f"toolchain_map({base.get('kernel')}@{base.get('grid')})"
     for f in TOOLMAP_HARD:
@@ -270,6 +344,27 @@ def correctness_projection(doc) -> bytes:
                  for p in doc.get("points", [])),
                 key=lambda p: (str(p["kernel"]), str(p["arch"]))),
             "summary": {k: doc.get(k) for k in SERVING_TOP_HARD},
+        }
+    elif isinstance(doc, dict) and doc.get("bench") == "fuzz":
+        stable = {
+            "results": sorted(
+                ({k: p.get(k) for k in ("kernel", "arch") + FUZZ_HARD}
+                 for p in doc.get("results", [])),
+                key=lambda p: (str(p["kernel"]), str(p["arch"]))),
+            "summary": {k: doc.get(k) for k in FUZZ_TOP_HARD},
+        }
+    elif isinstance(doc, dict) and doc.get("bench") == "fuzz_throughput":
+        stable = {
+            "rows": sorted(
+                ({k: r.get(k) for k in ("kernel",) + FUZZTP_HARD}
+                 for r in doc.get("rows", [])),
+                key=lambda r: str(r["kernel"])),
+            "top": {k: doc.get(k) for k in FUZZTP_TOP_HARD},
+            "summary": {
+                k: doc.get("summary", {}).get(k)
+                for k in ("verdicts_agree", "stacked_verdicts_agree",
+                          "ok", "mismatch", "unsat_capped", "unmapped",
+                          "kernels")},
         }
     elif (isinstance(doc, list) and doc
           and doc[0].get("bench") == "portfolio"):
@@ -322,6 +417,10 @@ def main(argv=None) -> int:
         check_toolchain_map(cur, base, gate)
     elif isinstance(base, dict) and base.get("bench") == "serving":
         check_serving(cur, base, gate)
+    elif isinstance(base, dict) and base.get("bench") == "fuzz":
+        check_fuzz(cur, base, gate)
+    elif isinstance(base, dict) and base.get("bench") == "fuzz_throughput":
+        check_fuzz_throughput(cur, base, gate)
     elif (isinstance(base, list) and base
           and base[0].get("bench") == "portfolio"):
         check_portfolio(cur, base, gate)

@@ -14,6 +14,9 @@
   serving         — mapping-as-a-service: Zipf workload through the
                     compile server (throughput, latency percentiles,
                     dedup/cache-hit contract)
+  fuzz_throughput — batched differential fuzzing: sequential vs batched
+                    vs kernel-stacked memories/sec + verdict agreement
+                    (skipped without the jax extra)
 
 Prints ``name,us_per_call,derived`` CSV per the harness convention and
 writes JSON artifacts under results/.  A lane that raises is reported as
@@ -161,6 +164,26 @@ def main() -> int:
                      f"cache_hit={doc['cache_hit_ratio']};"
                      f"dedup_ok={doc['dedup_ok']}"))
 
+    def lane_fuzz():
+        import importlib.util
+        if importlib.util.find_spec("jax") is None:
+            rows.append(("fuzz_throughput", 0.0, "skipped(no-jax)"))
+            return
+        from . import fuzz_throughput
+        # full lane writes beside the committed baseline, never over it
+        name, dt, doc = _run(
+            "fuzz_throughput",
+            lambda: fuzz_throughput.main(out="results/fuzz_throughput.json"))
+        s = doc["summary"]
+        if s["mismatch"] or not s["verdicts_agree"]:
+            raise RuntimeError(
+                f"fuzzing found {s['mismatch']} mismatching kernels "
+                f"(verdicts_agree={s['verdicts_agree']})")
+        rows.append((name, dt,
+                     f"ok={s['ok']}/{s['kernels']};speedup="
+                     f"{s['geomean_batched_speedup']}x;verdicts_agree="
+                     f"{s['verdicts_agree']}"))
+
     lane("fig7_table4", lane_fig7)
     lane("table7_8", lane_table7_8)
     lane("solver_opts", lane_solver_opts)
@@ -170,6 +193,7 @@ def main() -> int:
     lane("arch_dse", lane_arch_dse)
     lane("serving", lane_serving)
     lane("frontend_cosim", lane_frontend)
+    lane("fuzz_throughput", lane_fuzz)
 
     print("\nname,us_per_call,derived")
     for name, dt, derived in rows:

@@ -38,6 +38,11 @@ for _op in LOAD_OPS + STORE_OPS:
     OP_ENERGY[_op] = 6.0
 OP_ENERGY["NOP"] = 0.0
 STATIC_PJ_PER_PE_CYCLE = 1.3   # leakage + clock tree + config readout
+#: toggle rate the static per-op energies are calibrated at (random data:
+#: each operand/result bit flips half the time).  Empirical activity from
+#: ``repro.fuzz.activity`` scales each op's dynamic energy by
+#: ``measured_rate / ACTIVITY_REF``.
+ACTIVITY_REF = 0.5
 
 # relative area units per PE building block (65 nm-class ratios; the DSE
 # area objective and the capability-scaled static model, never absolute)
@@ -108,14 +113,38 @@ def row_latency(row, num_cols: int) -> int:
     return base + extra
 
 
+def _activity_scales(activity) -> Dict[str, float]:
+    """Per-op dynamic-energy scale factors from measured switching
+    activity (an ``ActivityReport`` or its ``to_dict()`` form).  An op's
+    scale is the mean of its result- and operand-bus toggle rates over
+    the calibration rate; ops the activity never saw keep 1.0."""
+    if isinstance(activity, dict):
+        res = activity.get("result_toggle", {})
+        opnd = activity.get("operand_toggle", {})
+    else:
+        res = activity.result_toggle
+        opnd = activity.operand_toggle
+    scales: Dict[str, float] = {}
+    for op in set(res) | set(opnd):
+        rates = [r for r in (res.get(op), opnd.get(op)) if r is not None]
+        scales[op] = (sum(rates) / len(rates)) / ACTIVITY_REF
+    return scales
+
+
 def runtime_metrics(asm: AssembledCIL, num_cols: int,
                     utilization: float,
-                    grid: Optional[PEGrid] = None) -> RuntimeMetrics:
+                    grid: Optional[PEGrid] = None,
+                    activity=None) -> RuntimeMetrics:
     """``grid=None`` keeps the calibrated homogeneous static constant
     (byte-identical committed baselines); passing a grid scales leakage
-    by its capability table (== the constant for all-capable 4-reg PEs)."""
+    by its capability table (== the constant for all-capable 4-reg PEs).
+    ``activity=`` (a ``repro.fuzz.activity`` report) replaces the implicit
+    random-data switching assumption with measured toggle rates; the
+    static term and the ``activity=None`` path are untouched."""
     cycles = sum(row_latency(row, num_cols) for row in asm.rows)
+    scales = _activity_scales(activity) if activity is not None else {}
     dynamic = sum(count * OP_ENERGY.get(op, _DEFAULT_OP_ENERGY)
+                  * scales.get(op, 1.0)
                   for op, count in sorted(asm.op_counts().items()))
     if grid is None:
         static = cycles * asm.num_pes * STATIC_PJ_PER_PE_CYCLE
@@ -129,10 +158,14 @@ def runtime_metrics(asm: AssembledCIL, num_cols: int,
                           static_nj=static / 1000.0)
 
 
-def metrics_for_mapping(program, mapping) -> RuntimeMetrics:
+def metrics_for_mapping(program, mapping,
+                        activity=None) -> RuntimeMetrics:
     """Assemble ``mapping`` and run the calibrated model — the one-call
-    metrics path used by the DSE sweep (no JAX execution involved)."""
+    metrics path used by the DSE sweep (no JAX execution involved).
+    ``activity=`` threads measured switching statistics through to
+    :func:`runtime_metrics`."""
     from .bitstream import assemble
     asm = assemble(program, mapping)
     return runtime_metrics(asm, num_cols=mapping.grid.spec.cols,
-                           utilization=mapping.utilization)
+                           utilization=mapping.utilization,
+                           activity=activity)

@@ -36,12 +36,33 @@ def map_for_execution(program: LoopBuilder, grid: PEGrid, config=None):
 
 
 def neighbor_table(grid: PEGrid) -> Tuple[Tuple[int, int, int, int], ...]:
-    """(N, E, S, W) neighbor PE ids per PE (torus)."""
+    """(N, E, S, W) neighbor PE ids per PE, honoring the grid's resolved
+    topology.
+
+    Only the torus wraps: on a mesh an edge PE has no neighbor in the
+    off-grid direction, so the selector is wired back to the PE itself
+    (reading it returns the PE's own OUT — the self/ZERO semantics of an
+    unconnected port; the assembler never emits such a read, because
+    ``_direction`` only resolves PEs that are mapped as adjacent).
+    Before this derived from the topology, the table always wrapped, so a
+    bitstream executing on a mesh could observe values across the seam
+    that the hardware has no wire for.
+    """
+    wrap = grid.spec.resolved_topology() == "torus"
+    rows, cols = grid.spec.rows, grid.spec.cols
     out = []
     for p in range(grid.num_pes):
         r, c = grid.coords(p)
-        out.append((grid.pe_at(r - 1, c), grid.pe_at(r, c + 1),
-                    grid.pe_at(r + 1, c), grid.pe_at(r, c - 1)))
+        ids = []
+        for dr, dc in ((-1, 0), (0, 1), (1, 0), (0, -1)):   # N, E, S, W
+            nr, nc = r + dr, c + dc
+            if wrap:
+                ids.append(grid.pe_at(nr, nc))
+            elif 0 <= nr < rows and 0 <= nc < cols:
+                ids.append(nr * cols + nc)
+            else:
+                ids.append(p)
+        out.append(tuple(ids))
     return tuple(out)
 
 
@@ -53,27 +74,47 @@ class SimResult:
     total_rows: int
 
 
-def simulate(program: LoopBuilder, mapping: Mapping, mem: np.ndarray,
-             batch: int = 1, backend: str = "ref",
-             interpret: bool = True) -> SimResult:
+def preset_state(asm: AssembledCIL, num_pes: int, mem: np.ndarray,
+                 batch: int):
+    """Initial PE-array state for ``asm``: zeros plus the register/output
+    presets that seed loop-carried values for iteration 0."""
     # deferred: JAX is an optional extra — mapping (map_for_execution) must
     # work without it; only execution needs the PE-array kernels
-    from ..kernels.ops import decode_fields, init_state, run_program
-    asm = assemble(program, mapping)
-    fields = decode_fields(asm.words())
-    state = init_state(batch, mapping.grid.num_pes, mem)
-    # presets: loop-carried values for iteration 0
+    from ..kernels.ops import init_state
+    state = init_state(batch, num_pes, mem)
     out0 = np.array(state.out)
     regs0 = np.array(state.regs)
     for pe, val in asm.presets_out.items():
         out0[:, pe] = val
     for (pe, reg), val in asm.presets_reg.items():
         regs0[:, pe, reg] = val
-    state = state._replace(out=out0, regs=regs0)
-    nbrs = neighbor_table(mapping.grid)
+    return state._replace(out=out0, regs=regs0)
+
+
+def execute_asm(asm: AssembledCIL, grid: PEGrid, mem: np.ndarray,
+                batch: int = 1, backend: str = "ref",
+                interpret: bool = True):
+    """Run an already-assembled CIL over ``batch`` memories in one
+    dispatch.  Returns ``(final_state, outs (T, B, P), out0 (B, P))`` —
+    the shared execution seam under :func:`simulate` and the batched
+    fuzzing engine (``repro.fuzz.engine``), which also needs the preset
+    initial OUT values for switching-activity harvesting."""
+    from ..kernels.ops import decode_fields, run_program
+    fields = decode_fields(asm.words())
+    state = preset_state(asm, grid.num_pes, mem, batch)
+    out0 = np.array(state.out)
+    nbrs = neighbor_table(grid)
     final, outs = run_program(fields, state, nbrs, backend=backend,
                               interpret=interpret)
-    outs = np.asarray(outs)                 # (T, B, P)
+    return final, np.asarray(outs), out0
+
+
+def simulate(program: LoopBuilder, mapping: Mapping, mem: np.ndarray,
+             batch: int = 1, backend: str = "ref",
+             interpret: bool = True) -> SimResult:
+    asm = assemble(program, mapping)
+    final, outs, _ = execute_asm(asm, mapping.grid, mem, batch=batch,
+                                 backend=backend, interpret=interpret)
     node_values: Dict[int, np.ndarray] = {}
     last_iter = program.trip - 1
     for (t, pe), (n, j) in asm.node_of_cell.items():

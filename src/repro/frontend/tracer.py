@@ -23,7 +23,7 @@ from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
-from .ir import CarryDef, TNode, Trace, eval_binop, eval_cmp, s32
+from .ir import FXP_FRAC_BITS, CarryDef, TNode, Trace, eval_binop, eval_cmp, s32
 
 
 class TraceError(RuntimeError):
@@ -184,7 +184,103 @@ class ConcreteSession:
         self.mem[self._check(addr)] = s32(val)
 
 
-Session = Union[GraphSession, ConcreteSession]
+def _wrap32_arr(x) -> np.ndarray:
+    """Vectorized :func:`~repro.frontend.ir.s32` on int64 arrays."""
+    x = np.asarray(x, np.int64) & ((1 << 32) - 1)
+    return x - ((x >= (1 << 31)).astype(np.int64) << 32)
+
+
+class BatchedSession:
+    """Executes the body on batched int64 arrays against a (B, M) memory —
+    the vectorized reference of the co-simulation.
+
+    Operand refs are int64 scalars/arrays holding wrapped int32 values:
+    constants and induction carries stay 0-d (one address computation per
+    batch), data touched by loads becomes (B,).  Semantics mirror
+    :class:`ConcreteSession` / ``repro.frontend.ir.eval_binop`` bit for
+    bit — the fxpmul product is exact-wide, comparisons test the wrapped
+    32-bit difference.  Loads and stores accept 0-d addresses (the traced
+    kernels compute every address from induction carries) and (B,) ones.
+    """
+
+    mode = "concrete"
+
+    def __init__(self, mems: np.ndarray):
+        mems = np.asarray(mems, np.int64)
+        if mems.ndim == 1:
+            mems = mems[None, :]
+        self.mems = _wrap32_arr(mems)
+        self.batch = self.mems.shape[0]
+
+    def const(self, v: int):
+        return s32(v)
+
+    def binop(self, op: str, a, b):
+        a = np.asarray(a, np.int64)
+        b = np.asarray(b, np.int64)
+        if op == "add":
+            return _wrap32_arr(a + b)
+        if op == "sub":
+            return _wrap32_arr(a - b)
+        if op == "mul":
+            return _wrap32_arr(a * b)
+        if op == "fxpmul":
+            return _wrap32_arr((a * b) >> FXP_FRAC_BITS)
+        if op == "and":
+            return _wrap32_arr(a & b)
+        if op == "or":
+            return _wrap32_arr(a | b)
+        if op == "xor":
+            return _wrap32_arr(a ^ b)
+        if op == "shl":
+            return _wrap32_arr(a << (b & 31))
+        if op == "lshr":
+            return _wrap32_arr((a & ((1 << 32) - 1)) >> (b & 31))
+        if op == "ashr":
+            return _wrap32_arr(a >> (b & 31))
+        raise ValueError(f"unknown binary IR op {op!r}")
+
+    def cmp(self, op: str, a, b):
+        d = _wrap32_arr(np.asarray(a, np.int64) - np.asarray(b, np.int64))
+        if op == "lt":
+            return d < 0
+        if op == "ge":
+            return d >= 0
+        if op == "eq":
+            return d == 0
+        if op == "ne":
+            return d != 0
+        raise ValueError(f"unknown compare IR op {op!r}")
+
+    def select(self, cond, a, b):
+        return np.where(cond, np.asarray(a, np.int64),
+                        np.asarray(b, np.int64))
+
+    def _check(self, addr) -> np.ndarray:
+        addr = np.asarray(addr, np.int64)
+        size = self.mems.shape[1]
+        if ((addr < 0) | (addr >= size)).any():
+            off = int(np.asarray(addr).ravel()[0]) if addr.ndim == 0 \
+                else int(addr[((addr < 0) | (addr >= size))][0])
+            raise TraceError(f"memory address {off} outside [0, {size})")
+        return addr
+
+    def load(self, addr):
+        addr = self._check(addr)
+        if addr.ndim == 0:
+            return self.mems[:, addr]
+        return self.mems[np.arange(self.batch), addr]
+
+    def store(self, addr, val) -> None:
+        addr = self._check(addr)
+        val = np.broadcast_to(_wrap32_arr(val), (self.batch,))
+        if addr.ndim == 0:
+            self.mems[:, addr] = val
+        else:
+            self.mems[np.arange(self.batch), addr] = val
+
+
+Session = Union[GraphSession, ConcreteSession, BatchedSession]
 
 
 # ---------------------------------------------------------------------------
@@ -483,3 +579,25 @@ def python_reference(
         body(LoopState(sess, bindings), SymMem(sess))
         vals = {n: bindings[n].ref for n in vals}
     return {n: vals[n] for n in spec.result_names()}, mem_list
+
+
+def batched_reference(
+    spec: LoopSpec, body: Body, mems: np.ndarray
+) -> Tuple[Dict[str, np.ndarray], np.ndarray]:
+    """Execute ``body`` for ``spec.trip`` iterations over a whole (B, M)
+    batch of memories at once.  Returns (result carries as (B,) int64
+    arrays of wrapped int32 values, final (B, M) memory images) — the
+    vectorized reference that replaced the per-seed
+    :func:`python_reference` loop in the co-simulation harness."""
+    sess = BatchedSession(mems)
+    vals: Dict[str, object] = {n: s32(i) for n, i in spec.carries.items()}
+    for _ in range(spec.trip):
+        bindings = {n: SymValue(sess, v) for n, v in vals.items()}
+        body(LoopState(sess, bindings), SymMem(sess))
+        vals = {n: bindings[n].ref for n in vals}
+    results = {
+        n: np.broadcast_to(np.asarray(vals[n], np.int64),
+                           (sess.batch,)).copy()
+        for n in spec.result_names()
+    }
+    return results, sess.mems

@@ -1,0 +1,33 @@
+"""repro.fuzz — batched differential fuzzing of mapped CILs.
+
+The verification fleet the ROADMAP asked for: one bitstream executed over
+thousands of randomized memories per JAX dispatch (the PE-array's batch
+axis), kernels of equal grid size stacked on a ``vmap``-ed kernel axis,
+and the Python reference oracle vectorized in numpy so it is no longer
+the serial bottleneck.  On a mismatch, :mod:`repro.fuzz.triage` shrinks
+the batch to a single failing memory by bisection, replays it with a full
+trace to name the first divergent (cycle, PE, node), and writes a
+reproducer JSON.  :mod:`repro.fuzz.activity` harvests per-op execution
+counts and operand/result toggle rates from the same batched runs and
+feeds them to :mod:`repro.cgra.energy` as measured switching statistics.
+
+Layers:
+
+* :mod:`repro.fuzz.corpus`   — deterministic seeded memory generators
+* :mod:`repro.fuzz.engine`   — batched oracle + batched/stacked execution
+* :mod:`repro.fuzz.triage`   — shrinking, divergence replay, reproducers
+* :mod:`repro.fuzz.activity` — switching-activity harvesting
+* :mod:`repro.fuzz.cli`      — ``python -m repro fuzz``
+
+Only :mod:`engine`'s execution paths and :mod:`activity` need the ``jax``
+extra; the corpus generators and the batched oracle are pure numpy.
+"""
+
+from .corpus import STRATEGIES, kernel_regions, make_corpus  # noqa: F401
+from .engine import (  # noqa: F401
+    FuzzReport,
+    batched_oracle,
+    batched_oracle_iterations,
+    fuzz_kernel,
+    fuzz_program,
+)

@@ -1,0 +1,200 @@
+"""Switching-activity harvesting from batched PE-array runs.
+
+The static energy model (``repro.cgra.energy``) charges every executed op
+its full per-op energy — implicitly assuming reference switching activity
+on the operand and result buses.  This module replays the recorded out
+traces of a batched run through the *routing* datapath (operand selectors
++ register file + neighbor wiring — no ALU re-execution needed, the
+results are the trace) and measures what actually toggled:
+
+* per-op executed-instance counts (cells x memories; NOPs included, so
+  fault-free counts equal ``AssembledCIL.op_counts() x B``),
+* result-bus toggle rates: Hamming distance between consecutive OUT
+  values of each PE, per executed op, as a fraction of 32 bits,
+* operand-bus toggle rates: same statistic on the A/B port values each
+  executed op actually latched.
+
+``repro.cgra.energy.runtime_metrics(activity=...)`` turns these into an
+empirical dynamic-energy estimate: each op's energy scales with its
+measured toggle rate relative to the reference rate
+(``ACTIVITY_REF = 0.5``, i.e. random data).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Dict, Optional
+
+import numpy as np
+
+from ..cgra.arch import PEGrid
+from ..cgra.bitstream import AssembledCIL
+from ..cgra.isa import OPCODE, OPS, SRC_IMM, SRC_OWN, SRC_ZERO
+
+M32 = (1 << 32) - 1
+
+try:
+    _np_bitcount = np.bitwise_count          # numpy >= 2.0
+except AttributeError:                        # pragma: no cover - old numpy
+    _np_bitcount = None
+    _POP_TABLE = np.array([bin(i).count("1") for i in range(256)],
+                          np.uint8)
+
+
+def popcount_u32(x: np.ndarray) -> np.ndarray:
+    """Per-element popcount of a uint32 array."""
+    if _np_bitcount is not None:
+        return _np_bitcount(x).astype(np.int64)
+    b = np.ascontiguousarray(x).view(np.uint8)  # pragma: no cover
+    return _POP_TABLE[b].reshape(x.shape + (4,)).sum(-1).astype(np.int64)
+
+
+def _xor_bits(a: np.ndarray, b: np.ndarray) -> np.ndarray:
+    """Hamming distance between int64-held int32 values, elementwise."""
+    return popcount_u32((((a ^ b) & M32)).astype(np.uint32))
+
+
+@dataclass
+class ActivityReport:
+    """Aggregated switching statistics of one assembled kernel."""
+
+    kernel: str
+    memories: int                       # total memories harvested
+    cycles: int                         # schedule rows (T)
+    op_exec: Dict[str, int]             # op -> executed instances (x mems)
+    result_toggle: Dict[str, float]     # op -> mean result toggle rate
+    operand_toggle: Dict[str, float]    # op -> mean operand toggle rate
+
+    def to_dict(self) -> Dict:
+        return {
+            "kernel": self.kernel,
+            "memories": self.memories,
+            "cycles": self.cycles,
+            "op_exec": dict(sorted(self.op_exec.items())),
+            "result_toggle": {k: round(v, 6) for k, v in
+                              sorted(self.result_toggle.items())},
+            "operand_toggle": {k: round(v, 6) for k, v in
+                               sorted(self.operand_toggle.items())},
+        }
+
+
+class ActivityAccumulator:
+    """Streams batched out traces into toggle statistics.
+
+    One accumulator per assembled kernel; call :meth:`update` with each
+    chunk's out trace (T, B, P) and read :meth:`report` at the end.
+    The operand replay mirrors ``repro.kernels.ref.select_operand``
+    exactly (register file timeline included), so the harvested values
+    are the values the ALU ports actually saw.
+    """
+
+    def __init__(self, asm: AssembledCIL, grid: PEGrid):
+        from ..cgra.simulator import neighbor_table
+
+        self.asm = asm
+        rows = asm.rows
+        T, P = len(rows), asm.num_pes
+        self.T, self.P = T, P
+        self.op = np.array([[OPCODE[ins.op] for ins in row]
+                            for row in rows], np.int64)
+        self.dst = np.array([[ins.dst for ins in row] for row in rows],
+                            np.int64)
+        self.sa = np.array([[ins.src_a for ins in row] for row in rows],
+                           np.int64)
+        self.sb = np.array([[ins.src_b for ins in row] for row in rows],
+                           np.int64)
+        self.imm = np.array([[ins.imm for ins in row] for row in rows],
+                            np.int64)
+        self.nbr = np.asarray(neighbor_table(grid), np.int64)  # (P, 4)
+        out0 = np.zeros(P, np.int64)
+        regs0 = np.zeros((P, 4), np.int64)
+        for pe, val in asm.presets_out.items():
+            out0[pe] = np.int64(np.int32(val))
+        for (pe, r), val in asm.presets_reg.items():
+            regs0[pe, r] = np.int64(np.int32(val))
+        self._out0, self._regs0 = out0, regs0
+        n_ops = len(OPS)
+        self._cells_per_op = np.bincount(self.op.ravel(), minlength=n_ops)
+        self._res_bits = np.zeros(n_ops, np.int64)
+        self._opnd_bits = np.zeros(n_ops, np.int64)
+        self._memories = 0
+
+    def _select(self, sel: np.ndarray, regs: np.ndarray, out: np.ndarray,
+                imm_row: np.ndarray) -> np.ndarray:
+        """sel (P,), regs (B, P, 4), out (B, P) -> chosen operand (B, P),
+        source order matching the ISA selector codes."""
+        B, P = out.shape
+        cands = np.empty((11, B, P), np.int64)
+        for k in range(4):
+            cands[k] = regs[:, :, k]
+        cands[SRC_OWN] = out
+        for k in range(4):                       # N, E, S, W
+            cands[SRC_OWN + 1 + k] = out[:, self.nbr[:, k]]
+        cands[SRC_IMM] = np.broadcast_to(imm_row, (B, P))
+        cands[SRC_ZERO] = 0
+        return cands[sel, :, np.arange(P)].T     # (B, P)
+
+    def update(self, outs: np.ndarray) -> None:
+        """Fold one chunk's out trace (T, B, P) into the statistics."""
+        outs = _wrap_trace(outs)
+        T, B, P = outs.shape
+        if (T, P) != (self.T, self.P):
+            raise ValueError(
+                f"trace shape ({T}, ., {P}) does not match the schedule "
+                f"({self.T}, ., {self.P})")
+        prev_out = np.broadcast_to(self._out0, (B, P)).copy()
+        regs = np.broadcast_to(self._regs0, (B, P, 4)).copy()
+        prev_a = np.zeros((B, P), np.int64)
+        prev_b = np.zeros((B, P), np.int64)
+        for t in range(T):
+            executed = self.op[t] != 0                        # (P,)
+            a = self._select(self.sa[t], regs, prev_out, self.imm[t])
+            b = self._select(self.sb[t], regs, prev_out, self.imm[t])
+            res = outs[t]
+            tog_res = _xor_bits(res, prev_out).sum(axis=0) * executed
+            tog_opnd = (_xor_bits(a, prev_a) + _xor_bits(b, prev_b)) \
+                .sum(axis=0) * executed
+            np.add.at(self._res_bits, self.op[t], tog_res)
+            np.add.at(self._opnd_bits, self.op[t], tog_opnd)
+            exec_b = executed[None, :]
+            prev_out = np.where(exec_b, res, prev_out)
+            prev_a = np.where(exec_b, a, prev_a)
+            prev_b = np.where(exec_b, b, prev_b)
+            for k in range(4):
+                hit = exec_b & (self.dst[t] == k)[None, :]
+                regs[:, :, k] = np.where(hit, res, regs[:, :, k])
+        self._memories += B
+
+    def report(self) -> ActivityReport:
+        op_exec: Dict[str, int] = {}
+        result_toggle: Dict[str, float] = {}
+        operand_toggle: Dict[str, float] = {}
+        for code, name in enumerate(OPS):
+            cells = int(self._cells_per_op[code])
+            if cells == 0:
+                continue
+            instances = cells * self._memories
+            op_exec[name] = instances
+            if name == "NOP" or instances == 0:
+                continue
+            result_toggle[name] = float(self._res_bits[code]) \
+                / (32.0 * instances)
+            operand_toggle[name] = float(self._opnd_bits[code]) \
+                / (64.0 * instances)
+        return ActivityReport(
+            kernel=self.asm.name, memories=self._memories, cycles=self.T,
+            op_exec=op_exec, result_toggle=result_toggle,
+            operand_toggle=operand_toggle)
+
+
+def _wrap_trace(outs) -> np.ndarray:
+    x = np.asarray(np.asarray(outs), np.int64) & M32
+    return x - ((x >= (1 << 31)).astype(np.int64) << 32)
+
+
+def harvest_activity(asm: AssembledCIL, grid: PEGrid,
+                     outs: np.ndarray) -> ActivityReport:
+    """One-shot harvest of a single batched run's out trace."""
+    acc = ActivityAccumulator(asm, grid)
+    acc.update(outs)
+    return acc.report()

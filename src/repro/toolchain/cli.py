@@ -8,6 +8,7 @@ Subcommands::
     repro submit KERNEL [--grid 4x4] [--json]        one request to a server
     repro cosim [...]    differential co-simulation (repro.frontend args)
     repro sweep [...]    design-space sweep          (repro.dse args)
+    repro fuzz [...]     batched differential fuzzing (repro.fuzz args)
     repro list [--origin handwritten|traced]         registered kernels
     repro arch list                                  presets + spec grammar
     repro arch show SPEC                             one spec, fully expanded
@@ -251,6 +252,10 @@ def main(argv: Optional[List[str]] = None) -> int:
         from ..dse.cli import main as sweep_main
 
         return sweep_main(argv[1:])
+    if argv and argv[0] == "fuzz":
+        from ..fuzz.cli import main as fuzz_main
+
+        return fuzz_main(argv[1:])
 
     ap = argparse.ArgumentParser(
         prog="python -m repro",
@@ -410,6 +415,11 @@ def main(argv: Optional[List[str]] = None) -> int:
         "sweep",
         add_help=False,
         help="design-space sweep (forwards to repro.dse; try --smoke)",
+    )
+    sub.add_parser(
+        "fuzz",
+        add_help=False,
+        help="batched differential fuzzing fleet (forwards to repro.fuzz)",
     )
 
     lp = sub.add_parser("list", help="list registered kernels")
