@@ -31,7 +31,13 @@ Three artifact shapes are understood:
 * ``benchmarks/fuzz_throughput.py`` documents
   (``bench: "fuzz_throughput"``) — rows are joined on kernel; the
   sequential-vs-batched verdict agreement is hard, all three rates and
-  the derived speedups are tolerance-gated.
+  the derived speedups are tolerance-gated;
+* ``benchmarks/obs_overhead.py`` documents (``bench: "obs"``) — cases
+  are joined on (kernel, arch); status/II, the tracing-does-not-perturb
+  flag (``same_ii``), span counts, trace validity and the attribution
+  and disabled-overhead verdicts are hard (all machine-independent
+  booleans); the off/on wall clocks are tolerance-gated and the raw
+  overhead percentages are reported only.
 
 ``--assert-identical`` additionally serializes the *correctness
 projection* of both sides (every machine-independent field, canonical
@@ -102,6 +108,15 @@ FUZZTP_TOP_HARD = ("arch", "memories", "batch", "seq_sample", "seed",
                    "smoke")
 FUZZTP_TIME = ("seq_rate", "batched_rate", "stacked_rate",
                "batched_speedup", "stacked_speedup")
+# tracing must not perturb solving (same_ii), drop instrumentation
+# (spans) or break the trace contract (valid/attr_ok) — all hard; the
+# attribution fraction and overhead percentages ride the wall clock
+OBS_HARD = ("status", "ii", "same_ii", "spans", "valid", "attr_floor",
+            "attr_ok")
+OBS_TOP_HARD = ("backend", "min_attribution", "max_disabled_overhead_pct",
+                "all_same_ii", "all_attr_ok", "all_valid",
+                "disabled_overhead_ok")
+OBS_TIME = ("wall_off_s", "wall_on_s")
 
 
 class Gate:
@@ -301,6 +316,29 @@ def check_fuzz_throughput(cur: Dict, base: Dict, gate: Gate) -> None:
                   base.get("summary", {}).get(f))
 
 
+def check_obs(cur: Dict, base: Dict, gate: Gate) -> None:
+    cur_ix = {(c["kernel"], c["arch"]): c for c in cur.get("cases", [])}
+    base_ix = {(c["kernel"], c["arch"]): c for c in base.get("cases", [])}
+    missing = sorted(str(k) for k in set(base_ix) - set(cur_ix))
+    if missing:
+        gate.errors.append(f"obs: cases missing: {missing}")
+    for key, b in base_ix.items():
+        c = cur_ix.get(key)
+        if c is None:
+            continue
+        where = "obs" + str(key)
+        for f in OBS_HARD:
+            if f in b:
+                gate.hard(where, f, c.get(f), b.get(f))
+        for f in OBS_TIME:
+            gate.timed(where, f, c.get(f), b.get(f))
+    for f in OBS_TOP_HARD:
+        if f in base:
+            gate.hard("obs", f, cur.get(f), base.get(f))
+    gate.timed("obs", "wall_time_s", cur.get("wall_time_s"),
+               base.get("wall_time_s"))
+
+
 def check_toolchain_map(cur: Dict, base: Dict, gate: Gate) -> None:
     where = f"toolchain_map({base.get('kernel')}@{base.get('grid')})"
     for f in TOOLMAP_HARD:
@@ -352,6 +390,14 @@ def correctness_projection(doc) -> bytes:
                  for p in doc.get("results", [])),
                 key=lambda p: (str(p["kernel"]), str(p["arch"]))),
             "summary": {k: doc.get(k) for k in FUZZ_TOP_HARD},
+        }
+    elif isinstance(doc, dict) and doc.get("bench") == "obs":
+        stable = {
+            "cases": sorted(
+                ({k: c.get(k) for k in ("kernel", "arch") + OBS_HARD}
+                 for c in doc.get("cases", [])),
+                key=lambda c: (str(c["kernel"]), str(c["arch"]))),
+            "top": {k: doc.get(k) for k in OBS_TOP_HARD},
         }
     elif isinstance(doc, dict) and doc.get("bench") == "fuzz_throughput":
         stable = {
@@ -421,6 +467,8 @@ def main(argv=None) -> int:
         check_fuzz(cur, base, gate)
     elif isinstance(base, dict) and base.get("bench") == "fuzz_throughput":
         check_fuzz_throughput(cur, base, gate)
+    elif isinstance(base, dict) and base.get("bench") == "obs":
+        check_obs(cur, base, gate)
     elif (isinstance(base, list) and base
           and base[0].get("bench") == "portfolio"):
         check_portfolio(cur, base, gate)

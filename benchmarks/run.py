@@ -17,11 +17,16 @@
   fuzz_throughput — batched differential fuzzing: sequential vs batched
                     vs kernel-stacked memories/sec + verdict agreement
                     (skipped without the jax extra)
+  obs_overhead    — tracing cost (off/on) + attribution on the smoke
+                    compiles (repro.obs)
 
 Prints ``name,us_per_call,derived`` CSV per the harness convention and
-writes JSON artifacts under results/.  A lane that raises is reported as
-``failed`` and the run exits non-zero so CI catches breakage instead of
-silently continuing.
+writes JSON artifacts under results/.  Every lane's wall time (including
+failed and skipped ones) also lands machine-readably in
+``results/bench_lanes.json`` so "where did the benchmark time go" has a
+first-class answer.  A lane that raises is reported as ``failed`` and
+the run exits non-zero so CI catches breakage instead of silently
+continuing.
 """
 from __future__ import annotations
 
@@ -42,16 +47,23 @@ def main() -> int:
     os.makedirs("results", exist_ok=True)
     rows = []
     failures = []
+    lane_walls = []
 
     def lane(name, fn):
         """Run one benchmark lane; a raising lane fails the whole run
-        (non-zero exit) but the remaining lanes still execute."""
+        (non-zero exit) but the remaining lanes still execute.  Every
+        lane's wall time is recorded for results/bench_lanes.json."""
+        t0 = time.monotonic()
         try:
             fn()
+            status = "ok"
         except Exception:
             traceback.print_exc()
             failures.append(name)
             rows.append((name, 0.0, "FAILED"))
+            status = "failed"
+        lane_walls.append({"lane": name, "status": status,
+                           "wall_s": round(time.monotonic() - t0, 3)})
 
     import json
     reuse = os.environ.get("REPRO_BENCH_REUSE") == "1"
@@ -184,6 +196,19 @@ def main() -> int:
                      f"{s['geomean_batched_speedup']}x;verdicts_agree="
                      f"{s['verdicts_agree']}"))
 
+    def lane_obs():
+        from . import obs_overhead
+        # full lane writes beside the committed baseline, never over it
+        name, dt, doc = _run(
+            "obs_overhead",
+            lambda: obs_overhead.main(out="results/obs_overhead.json"))
+        if not (doc["all_same_ii"] and doc["all_valid"]):
+            raise RuntimeError("tracing perturbed or lost a compile")
+        rows.append((name, dt,
+                     f"attr_ok={doc['all_attr_ok']};"
+                     f"disabled_pct={doc['disabled_overhead_pct']};"
+                     f"disabled_ok={doc['disabled_overhead_ok']}"))
+
     lane("fig7_table4", lane_fig7)
     lane("table7_8", lane_table7_8)
     lane("solver_opts", lane_solver_opts)
@@ -194,10 +219,21 @@ def main() -> int:
     lane("serving", lane_serving)
     lane("frontend_cosim", lane_frontend)
     lane("fuzz_throughput", lane_fuzz)
+    lane("obs_overhead", lane_obs)
+
+    with open("results/bench_lanes.json", "w") as fh:
+        json.dump({"lanes": lane_walls,
+                   "total_wall_s": round(sum(lw["wall_s"]
+                                             for lw in lane_walls), 3),
+                   "failed": failures}, fh, indent=1, sort_keys=True)
+        fh.write("\n")
 
     print("\nname,us_per_call,derived")
     for name, dt, derived in rows:
         print(f"{name},{dt:.0f},{derived}")
+    print("\nper-lane wall time (results/bench_lanes.json):")
+    for lw in lane_walls:
+        print(f"  {lw['lane']:<20}{lw['wall_s']:>9.3f}s  {lw['status']}")
     if failures:
         print(f"\nFAILED lanes: {', '.join(failures)}", file=sys.stderr)
         return 1

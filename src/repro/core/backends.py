@@ -38,6 +38,7 @@ import time
 from dataclasses import dataclass
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from ..obs import trace as obs_trace
 from ..sat.cnf import And, CNF, Formula, Not, Or, Tseitin, Var
 from ..sat.cdcl import CDCLSolver, INTERRUPTED, SAT, UNSAT, UNKNOWN
 from .sat_encoding import KMSEncoding, check_deadline as _check_deadline
@@ -364,6 +365,19 @@ class CDCLSession(SolverSession):
               ) -> Tuple[str, Optional[Dict[int, bool]], SolveStats]:
         t0 = time.monotonic()
         incremental = self.solver.stats.solve_calls > 0
+        # deep telemetry: while a trace span is active, periodic progress
+        # samples (conflicts/decisions/propagations/restarts/learned) land
+        # on it as events; costs one attribute store when tracing is off
+        sp = obs_trace.current()
+        if sp is not None:
+            def _progress(st, _sp=sp):
+                _sp.event("solver.progress", conflicts=st.conflicts,
+                          decisions=st.decisions,
+                          propagations=st.propagations,
+                          restarts=st.restarts, learned=st.learned)
+            self.solver.on_progress = _progress
+        else:
+            self.solver.on_progress = None
         res = self.solver.solve(timeout_s=timeout_s, assumptions=assumptions,
                                 stop=stop)
         stats = SolveStats("cdcl", time.monotonic() - t0, self.cnf.num_vars,

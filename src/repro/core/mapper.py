@@ -36,6 +36,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence
 
 from ..cgra.arch import PEGrid
+from ..obs import trace as obs_trace
 from .backends import (PortfolioSpec, Strategy, make_session,
                        resolve_backend, resolve_portfolio)
 from .dfg import DFG
@@ -264,6 +265,21 @@ def attempt_ii(dfg: DFG, grid: PEGrid, ms, ii: int, cfg: MapperConfig,
     portfolio racer (:mod:`repro.core.portfolio`) runs many instances
     concurrently.  ``blocked`` is the caller's counterexample pool (not
     mutated; discoveries come back in ``IIOutcome.new_blocked``)."""
+    with obs_trace.span("mapper.attempt_ii", ii=ii,
+                        strategy=strategy.name) as sp:
+        out = _attempt_ii(dfg, grid, ms, ii, cfg, strategy, blocked,
+                          assemble_check=assemble_check, deadline=deadline,
+                          stop=stop)
+        sp.set(verdict=out.verdict, cegar_rounds=out.cegar_rounds,
+               proven_unsat=out.proven_unsat,
+               encodings_built=out.encodings_built)
+    return out
+
+
+def _attempt_ii(dfg: DFG, grid: PEGrid, ms, ii: int, cfg: MapperConfig,
+                strategy: Strategy, blocked: Sequence,
+                assemble_check=None, deadline: Optional[float] = None,
+                stop: Optional[Callable[[], bool]] = None) -> IIOutcome:
     out = IIOutcome(ii=ii, verdict="advance")
     kms = fold_kms(ms, ii)
     pool = list(blocked)
@@ -274,11 +290,13 @@ def attempt_ii(dfg: DFG, grid: PEGrid, ms, ii: int, cfg: MapperConfig,
         t_enc = time.monotonic()
         try:
             if enc is None or not cfg.incremental:
-                enc = KMSEncoding(dfg, kms, grid,
-                                  symmetry_break=cfg.symmetry_break,
-                                  blocked_combinations=pool,
-                                  deadline=deadline)
-                session = strategy.session(enc, deadline=deadline)
+                with obs_trace.span("mapper.encode", ii=ii,
+                                    blocked=len(pool)):
+                    enc = KMSEncoding(dfg, kms, grid,
+                                      symmetry_break=cfg.symmetry_break,
+                                      blocked_combinations=pool,
+                                      deadline=deadline)
+                    session = strategy.session(enc, deadline=deadline)
                 out.encodings_built += 1
             elif new_clause is not None:
                 # within a CEGAR loop only the new blocking clause
@@ -296,7 +314,11 @@ def attempt_ii(dfg: DFG, grid: PEGrid, ms, ii: int, cfg: MapperConfig,
                 out.verdict = "timeout"
                 return out
             budget = min(budget, remaining) if budget else remaining
-        status, model, stats = session.solve(timeout_s=budget, stop=stop)
+        with obs_trace.span("solver.solve", ii=ii,
+                            backend=strategy.backend) as ssp:
+            status, model, stats = session.solve(timeout_s=budget, stop=stop)
+            ssp.set(status=status, incremental=stats.incremental,
+                    num_vars=stats.num_vars, num_clauses=stats.num_clauses)
         attempt = IIAttempt(ii=ii, status=status, time_s=stats.time_s,
                             num_vars=stats.num_vars,
                             num_clauses=stats.num_clauses,
@@ -319,7 +341,9 @@ def attempt_ii(dfg: DFG, grid: PEGrid, ms, ii: int, cfg: MapperConfig,
                         f"solver returned invalid mapping at II={ii}: "
                         f"{errs[:3]}")
             if assemble_check is not None:
-                counterexample = assemble_check(mapping)
+                with obs_trace.span("mapper.oracle", ii=ii) as osp:
+                    counterexample = assemble_check(mapping)
+                    osp.set(counterexample=bool(counterexample))
                 if counterexample:
                     out.cegar_rounds += 1
                     pool.append(counterexample)
@@ -389,46 +413,53 @@ def map_dfg(dfg: DFG, grid: PEGrid,
                                  assemble_check=assemble_check,
                                  facts_seed=facts_seed, jobs=jobs)
     strategy = spec.strategies[0]
-    t_start = time.monotonic()
-    deadline = (t_start + cfg.total_timeout_s
-                if cfg.total_timeout_s is not None else None)
-    ms = asap_alap(dfg)
-    mii = min_ii(dfg, grid.num_pes)
-    ii = max(mii, ii_start or 0)
-    result = MapResult(mapping=None, status="unsat-capped", mii=mii,
-                       backend=strategy.backend)
+    with obs_trace.span("mapper.ladder", backend=strategy.backend) as lsp:
+        t_start = time.monotonic()
+        deadline = (t_start + cfg.total_timeout_s
+                    if cfg.total_timeout_s is not None else None)
+        ms = asap_alap(dfg)
+        mii = min_ii(dfg, grid.num_pes)
+        ii = max(mii, ii_start or 0)
+        result = MapResult(mapping=None, status="unsat-capped", mii=mii,
+                           backend=strategy.backend)
 
-    blocked: List = []
-    known_unsat: set = set()
-    ii_max = cfg.ii_max
-    if facts_seed:
-        blocked.extend(facts_seed.get("blocked", ()))
-        known_unsat = set(facts_seed.get("unsat_iis", ()))
-        cap = facts_seed.get("ii_cap")
-        if cap is not None:
-            ii_max = min(ii_max, cap)
-        result.facts_used = len(blocked) + len(known_unsat) + \
-            (1 if cap is not None else 0)
-    while ii <= ii_max:
-        if deadline is not None and time.monotonic() > deadline:
-            result.status = "timeout"
-            break
-        if ii in known_unsat:
-            ii += 1  # lifted UNSAT-at-II fact: skip without solving
-            continue
-        out = attempt_ii(dfg, grid, ms, ii, cfg, strategy, blocked,
-                         assemble_check=assemble_check, deadline=deadline)
-        _merge_outcome(result, out)
-        blocked.extend(out.new_blocked)
-        if out.verdict == "mapped":
-            result.mapping = out.mapping
-            result.status = "mapped"
-            break
-        if out.verdict == "timeout":
-            result.status = "timeout"
-            break
-        ii += 1  # "advance" ("interrupted" cannot happen: no stop here)
-    result.total_time_s = time.monotonic() - t_start
+        blocked: List = []
+        known_unsat: set = set()
+        ii_max = cfg.ii_max
+        if facts_seed:
+            blocked.extend(facts_seed.get("blocked", ()))
+            known_unsat = set(facts_seed.get("unsat_iis", ()))
+            cap = facts_seed.get("ii_cap")
+            if cap is not None:
+                ii_max = min(ii_max, cap)
+            result.facts_used = len(blocked) + len(known_unsat) + \
+                (1 if cap is not None else 0)
+            lsp.event("facts.seeded", blocked=len(blocked),
+                      unsat_iis=len(known_unsat), ii_cap=cap)
+        while ii <= ii_max:
+            if deadline is not None and time.monotonic() > deadline:
+                result.status = "timeout"
+                break
+            if ii in known_unsat:
+                lsp.event("facts.skip_ii", ii=ii)
+                ii += 1  # lifted UNSAT-at-II fact: skip without solving
+                continue
+            out = attempt_ii(dfg, grid, ms, ii, cfg, strategy, blocked,
+                             assemble_check=assemble_check,
+                             deadline=deadline)
+            _merge_outcome(result, out)
+            blocked.extend(out.new_blocked)
+            if out.verdict == "mapped":
+                result.mapping = out.mapping
+                result.status = "mapped"
+                break
+            if out.verdict == "timeout":
+                result.status = "timeout"
+                break
+            ii += 1  # "advance" ("interrupted" cannot happen: no stop here)
+        result.total_time_s = time.monotonic() - t_start
+        lsp.set(status=result.status, ii=result.ii, mii=mii,
+                facts_used=result.facts_used)
     return result
 
 

@@ -58,6 +58,7 @@ from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Set, Tuple
 
 from ..cgra.arch import PEGrid
+from ..obs import trace as obs_trace
 from .backends import PortfolioSpec, parse_strategy
 from .dfg import DFG
 from .mapper import (IIOutcome, MapperConfig, MapResult, _merge_outcome,
@@ -247,6 +248,20 @@ def run_race_payload(payload: Dict[str, Any], inline: bool = False,
     failures come back structured, like :func:`_run_map_payload`.  The
     ``cancel`` event (set by the parent's ``_Worker.cancel``) is polled
     through the solver's cooperative ``stop`` hook."""
+    with obs_trace.span("worker.race", parent=payload.get("trace"),
+                        kernel=payload.get("kernel"), ii=payload["ii"],
+                        strategy=payload["strategy"],
+                        attempt=payload.get("attempt", 0)) as wsp:
+        res = _run_race_payload(payload, inline=inline, cancel=cancel)
+        if "outcome" in res:
+            wsp.set(verdict=res["outcome"]["verdict"])
+        elif "failure" in res:
+            wsp.set(failure=res["failure"].get("kind"))
+    return res
+
+
+def _run_race_payload(payload: Dict[str, Any], inline: bool = False,
+                      cancel=None) -> Dict[str, Any]:
     from ..toolchain import chaos
     from ..toolchain.resilience import (FailureKind, _arch_key,
                                         classify_exception, failure_record)
@@ -320,12 +335,16 @@ class _RaceTask:
     strategy_name: str
     blocked: List = field(default_factory=list)   # jsonable pool snapshot
     attempt: int = 0
+    trace_ctx: Optional[Dict[str, str]] = None    # obs span shipping context
 
     def payload(self) -> Dict[str, Any]:
-        return {"kind": "race-ii", "kernel": self.kernel, "dfg": self.dfg_obj,
-                "grid": self.grid, "cfg": self.cfg, "oracle": self.oracle,
-                "ii": self.ii, "strategy": self.strategy_name,
-                "blocked": self.blocked, "attempt": self.attempt}
+        p = {"kind": "race-ii", "kernel": self.kernel, "dfg": self.dfg_obj,
+             "grid": self.grid, "cfg": self.cfg, "oracle": self.oracle,
+             "ii": self.ii, "strategy": self.strategy_name,
+             "blocked": self.blocked, "attempt": self.attempt}
+        if self.trace_ctx is not None:
+            p["trace"] = self.trace_ctx
+        return p
 
     def attempt_id(self) -> Tuple[int, int, int]:
         return (self.ii, self.sidx, self.attempt)
@@ -344,6 +363,25 @@ def map_dfg_portfolio(dfg: DFG, grid: PEGrid, cfg: MapperConfig,
     :func:`repro.core.mapper.map_dfg`.  Dispatched to automatically when a
     :class:`MapperConfig` strategy names more than one strategy or a
     speculation depth > 1."""
+    with obs_trace.span("portfolio.race",
+                        strategies=[s.name for s in spec.strategies],
+                        spec_ii=spec.spec_ii) as sp:
+        result = _map_dfg_portfolio(dfg, grid, cfg, spec, ii_start=ii_start,
+                                    assemble_check=assemble_check,
+                                    facts_seed=facts_seed, jobs=jobs)
+        sp.set(status=result.status, ii=result.ii,
+               raced=result.strategies_raced,
+               cancelled=result.cancelled_after_s is not None,
+               winner=result.winner, facts_used=result.facts_used)
+    return result
+
+
+def _map_dfg_portfolio(dfg: DFG, grid: PEGrid, cfg: MapperConfig,
+                       spec: PortfolioSpec, *,
+                       ii_start: Optional[int] = None,
+                       assemble_check=None,
+                       facts_seed: Optional[Dict] = None,
+                       jobs: Optional[int] = None) -> MapResult:
     import os
 
     t_start = time.monotonic()
@@ -445,6 +483,9 @@ def _race_inline(dfg, grid, cfg, spec, book, *, assemble_check, ms,
         counters["raced"] += 1
         _absorb(pool, pool_seen, out.new_blocked)
         book.record(ii, sidx, out)
+        obs_trace.event("race.verdict", ii=ii,
+                        strategy=spec.strategies[sidx].name,
+                        verdict=out.verdict, proven_unsat=out.proven_unsat)
     return False
 
 
@@ -492,11 +533,14 @@ def _race_fleet(dfg, grid, cfg, spec, book, *, race_info, assemble_check,
         retries[key] = retries.get(key, 0) + 1
         if retries[key] > rcfg.max_retries:
             book.record_lost(*key)
+            obs_trace.event("race.lost", ii=key[0], sidx=key[1])
 
     def cancel_moot() -> None:
-        for (kii, _ks), ww in list(inflight.items()):
+        for (kii, ks), ww in list(inflight.items()):
             if book.moot(kii) and ww.cancel():
                 counters["cancelled"] = True
+                obs_trace.event("race.cancel", ii=kii,
+                                strategy=spec.strategies[ks].name)
 
     try:
         while book.resolution() is None:
@@ -512,6 +556,9 @@ def _race_fleet(dfg, grid, cfg, spec, book, *, race_info, assemble_check,
                 counters["raced"] += 1
                 _absorb(pool, pool_seen, out.new_blocked)
                 book.record(fb, 0, out)
+                obs_trace.event("race.verdict", ii=fb,
+                                strategy=spec.strategies[0].name,
+                                verdict=out.verdict, inline_fallback=True)
                 continue
             want = [t for t in book.wanted() if t not in inflight]
             for w in workers:
@@ -523,7 +570,8 @@ def _race_fleet(dfg, grid, cfg, spec, book, *, race_info, assemble_check,
                                  sidx=sidx,
                                  strategy_name=spec.strategies[sidx].name,
                                  blocked=combos_to_jsonable(pool),
-                                 attempt=retries.get((ii, sidx), 0))
+                                 attempt=retries.get((ii, sidx), 0),
+                                 trace_ctx=obs_trace.shipping_context())
                 w.assign(task, rcfg, now)
                 inflight[(ii, sidx)] = w
                 counters["raced"] += 1
@@ -559,9 +607,14 @@ def _race_fleet(dfg, grid, cfg, spec, book, *, race_info, assemble_check,
                 outcome = _outcome_from_jsonable(dfg, grid, out["outcome"])
                 _absorb(pool, pool_seen, outcome.new_blocked)
                 book.record(task.ii, task.sidx, outcome)
+                obs_trace.event("race.verdict", ii=task.ii,
+                                strategy=task.strategy_name,
+                                verdict=outcome.verdict,
+                                proven_unsat=outcome.proven_unsat)
                 if (book.resolution() is not None
                         and counters["commit_at"] is None):
                     counters["commit_at"] = time.monotonic()
+                    obs_trace.event("race.commit")
                 cancel_moot()
             # parent-side per-attempt deadline: kill, heal, retry
             now = time.monotonic()

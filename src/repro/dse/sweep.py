@@ -31,6 +31,7 @@ from dataclasses import dataclass
 from typing import Dict, List, Optional, Sequence, Tuple
 
 from ..core.mapper import MapperConfig, resolve_backend
+from ..obs import trace as obs_trace
 from ..toolchain import chaos
 from ..toolchain.artifacts import CompileResult
 from ..toolchain.oracles import ORACLE_TAG  # noqa: F401 (compat re-export)
@@ -216,9 +217,13 @@ def run_sweep(cfg: Optional[SweepConfig] = None,
         chaos.maybe_abort(completed)  # chaos: simulate a mid-sweep kill
 
     try:
-        tc.compile_many(cfg.kernels, grids=cfg.sizes, jobs=cfg.jobs,
-                        points=remaining, on_result=on_result,
-                        resilience=cfg.resilience)
+        with obs_trace.span("sweep", kernels=len(cfg.kernels),
+                            sizes=len(cfg.sizes),
+                            points=len(remaining)) as ssp:
+            tc.compile_many(cfg.kernels, grids=cfg.sizes, jobs=cfg.jobs,
+                            points=remaining, on_result=on_result,
+                            resilience=cfg.resilience)
+            ssp.set(completed=completed, resumed=resumed)
     finally:
         if journal is not None:
             journal.close()

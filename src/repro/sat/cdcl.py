@@ -59,7 +59,10 @@ class Stats:
     learned: int = 0
     solve_calls: int = 0
     clauses_added: int = 0
+    #: cumulative wall time across every :meth:`CDCLSolver.solve` call
     time_s: float = 0.0
+    #: wall time of the most recent :meth:`CDCLSolver.solve` call only
+    last_solve_s: float = 0.0
 
 
 class CDCLSolver:
@@ -85,6 +88,11 @@ class CDCLSolver:
         self._ok = True
         self._model: Optional[List[int]] = None
         self._interrupt = False
+        # progress telemetry: when set, called with ``self.stats`` every
+        # ``progress_every`` conflicts (observability hook — the callback
+        # must not mutate solver state)
+        self.on_progress: Optional[Callable[[Stats], None]] = None
+        self.progress_every = 2048
         if cnf is not None:
             self.ensure_var(cnf.num_vars)
             self.add_clauses(cnf.clauses)
@@ -311,7 +319,9 @@ class CDCLSolver:
         self._backtrack(0)
 
         def finish(res: str) -> str:
-            self.stats.time_s = time.monotonic() - t0
+            dt = time.monotonic() - t0
+            self.stats.last_solve_s = dt
+            self.stats.time_s += dt
             if res == SAT:
                 self._model = list(self.assign)
             self._backtrack(0)
@@ -366,6 +376,9 @@ class CDCLSolver:
                 if self._interrupt or (stop is not None and stop()):
                     return finish(INTERRUPTED)
                 self.stats.conflicts += 1
+                if (self.on_progress is not None
+                        and self.stats.conflicts % self.progress_every == 0):
+                    self.on_progress(self.stats)
                 conflicts_until_restart -= 1
                 if len(self.trail_lim) == 0:
                     self._ok = False

@@ -36,9 +36,12 @@ from __future__ import annotations
 import asyncio
 import dataclasses
 import sys
+import time
 from typing import Dict, Optional, Tuple
 
 from ..core.mapper import MapperConfig
+from ..obs import MetricsRegistry
+from ..obs import trace as obs_trace
 from ..toolchain.artifacts import CompileResult, format_error
 from ..toolchain.oracles import assembler_oracle
 from ..toolchain.resilience import (
@@ -84,7 +87,14 @@ class CompileServer:
         self.inflight = InflightCompiles()
         self.budgets = TenantBudgets(tenant_budget)
         self.stats = ServeStats()
+        #: per-stage latency histograms + farm counters (repro.obs);
+        #: surfaced additively through the ``stats`` verb's ``metrics``
+        #: field — old clients that only read the v1 fields still parse
+        self.metrics = MetricsRegistry()
         self._sessions: Dict[str, Toolchain] = {}
+        #: leader-side ``serve.dispatch`` spans by cache key, finished
+        #: when the pool outcome settles (brackets queue + worker time)
+        self._dispatch_spans: Dict[str, object] = {}
         self._server: Optional[asyncio.base_events.Server] = None
         self._closing: Optional[asyncio.Event] = None
         #: leader submissions to the pool — the "exactly one compile per
@@ -141,6 +151,12 @@ class CompileServer:
                              f"{key[:12]}; re-solving"))
         fut: asyncio.Future = loop.create_future()
         if self.inflight.join(key, fut):
+            trace_ctx = None
+            if obs_trace.enabled():
+                dsp = obs_trace.begin("serve.dispatch", kernel=prog.name,
+                                      arch=req.arch, priority=req.priority)
+                self._dispatch_spans[key] = dsp
+                trace_ctx = dsp.ship()
             task = MapTask(
                 key=key,
                 kernel=source if isinstance(source, str) else prog.dfg,
@@ -148,6 +164,7 @@ class CompileServer:
                 cfg=dataclasses.asdict(cfg),
                 oracle=self._oracle_payload(tc, prog),
                 priority=req.priority,
+                trace_ctx=trace_ctx,
             )
             self.mapper_invocations += 1
 
@@ -165,6 +182,7 @@ class CompileServer:
                 corrupt_note) -> None:
         """Pool outcome -> one finished result, fanned out to the whole
         coalesced group (runs on the event loop)."""
+        dsp = self._dispatch_spans.pop(key, None)
         waiters = self.inflight.pop(key)
         try:
             cr = tc.result_from_outcome(
@@ -172,10 +190,14 @@ class CompileServer:
                 cache_key=key if self.cache is not None else None,
                 corrupt_note=corrupt_note)
         except Exception as e:  # defensive: never strand a waiter
+            if dsp is not None:
+                dsp.finish(status="error")
             for fut in waiters:
                 if not fut.done():
                     fut.set_exception(e)
             return
+        if dsp is not None:
+            dsp.finish(status=cr.status, waiters=len(waiters))
         for fut in waiters:
             if not fut.done():
                 fut.set_result(cr)
@@ -190,6 +212,7 @@ class CompileServer:
     async def _serve_compile(self, msg: Dict, writer,
                              wlock: asyncio.Lock) -> None:
         self.stats.received += 1
+        t_req = time.monotonic()
         raw = msg.get("request")
         rid = raw.get("request_id", "") if isinstance(raw, dict) else ""
         try:
@@ -197,12 +220,15 @@ class CompileServer:
                                            else {})
         except ProtocolError as e:
             self.stats.errors += 1
+            self.metrics.inc("serve.errors")
             await self._send(writer, wlock, {
                 "type": "error", "request_id": str(rid),
                 "error": format_error(e)})
             return
+        self.metrics.observe("serve.queue_depth", self.pool.pending())
         if not self.budgets.admit(req.tenant):
             self.stats.rejected += 1
+            self.metrics.inc("serve.rejected")
             await self._send(writer, wlock, {
                 "type": "rejected", "request_id": req.request_id,
                 "tenant": req.tenant,
@@ -210,25 +236,48 @@ class CompileServer:
                            f"budget of {self.budgets.max_inflight} "
                            f"in-flight requests")})
             return
-        try:
-            cr, served = await self._compile(req)
-            if served == "compiled":
-                self.stats.compiled += 1
-            elif served == "coalesced":
-                self.stats.coalesced += 1
-            await self._send(writer, wlock, {
-                "type": "result", "request_id": req.request_id,
-                "served": served, "result": cr.to_dict()})
-        except Exception as e:
-            self.stats.errors += 1
-            await self._send(writer, wlock, {
-                "type": "error", "request_id": req.request_id,
-                "error": format_error(e)})
-        finally:
-            self.budgets.release(req.tenant)
+        with obs_trace.span("serve.request",
+                            kernel=(req.source if isinstance(req.source, str)
+                                    else "<dfg>"),
+                            arch=req.arch, tenant=req.tenant,
+                            priority=req.priority) as rsp:
+            try:
+                cr, served = await self._compile(req)
+                if served == "compiled":
+                    self.stats.compiled += 1
+                elif served == "coalesced":
+                    self.stats.coalesced += 1
+                rsp.set(served=served, status=cr.status)
+                self.metrics.inc(f"serve.served.{served}")
+                self.metrics.observe("serve.request_s",
+                                     time.monotonic() - t_req)
+                for stage, dt in cr.timings.items():
+                    self.metrics.observe(f"serve.stage.{stage}_s", dt)
+                await self._send(writer, wlock, {
+                    "type": "result", "request_id": req.request_id,
+                    "served": served, "result": cr.to_dict()})
+            except Exception as e:
+                self.stats.errors += 1
+                self.metrics.inc("serve.errors")
+                await self._send(writer, wlock, {
+                    "type": "error", "request_id": req.request_id,
+                    "error": format_error(e)})
+            finally:
+                self.budgets.release(req.tenant)
+
+    #: additive revision of the ``stats`` body within wire v1: consumers
+    #: may rely on every ``STATS_SCHEMA >= 2`` response carrying the
+    #: ``metrics`` and ``queue`` fields below; v1 readers ignore them
+    STATS_SCHEMA = 2
 
     def snapshot(self) -> Dict:
-        """The ``stats`` message body."""
+        """The ``stats`` message body.
+
+        Every field present at wire v1 keeps its exact name, position
+        and type — the golden-fixture test in ``tests/test_serve.py``
+        holds old clients parsing new responses.  New telemetry is
+        namespaced under the added optional keys (``stats_schema``,
+        ``metrics``, ``queue``)."""
         out = {
             "v": WIRE_VERSION,
             "serving": self.stats.snapshot(),
@@ -238,6 +287,12 @@ class CompileServer:
             "sessions": sorted(self._sessions),
             "jobs": self.jobs,
             "pool_pending": self.pool.pending(),
+            "stats_schema": self.STATS_SCHEMA,
+            "metrics": self.metrics.snapshot(),
+            "queue": {
+                "pool_pending": self.pool.pending(),
+                "inflight_keys": len(self.inflight),
+            },
         }
         if self.cache is not None:
             stats = getattr(self.cache, "stats", None)

@@ -9,6 +9,7 @@ Subcommands::
     repro cosim [...]    differential co-simulation (repro.frontend args)
     repro sweep [...]    design-space sweep          (repro.dse args)
     repro fuzz [...]     batched differential fuzzing (repro.fuzz args)
+    repro trace [...]    trace report / export / check (repro.obs args)
     repro list [--origin handwritten|traced]         registered kernels
     repro arch list                                  presets + spec grammar
     repro arch show SPEC                             one spec, fully expanded
@@ -46,6 +47,10 @@ def _cmd_map(args) -> int:
         ii_max=args.ii_max,
         strategy=args.strategy,
     )
+    if args.trace:
+        from ..obs import trace as obs_trace
+
+        obs_trace.enable(args.trace)
     oracle = None if args.no_oracle else "assembler"
     tc = Toolchain(args.arch or args.grid, cfg, cache=args.cache_dir,
                    oracle=oracle)
@@ -256,6 +261,10 @@ def main(argv: Optional[List[str]] = None) -> int:
         from ..fuzz.cli import main as fuzz_main
 
         return fuzz_main(argv[1:])
+    if argv and argv[0] == "trace":
+        from ..obs.cli import main as trace_main
+
+        return trace_main(argv[1:])
 
     ap = argparse.ArgumentParser(
         prog="python -m repro",
@@ -310,6 +319,13 @@ def main(argv: Optional[List[str]] = None) -> int:
         "--no-oracle",
         action="store_true",
         help="disable the assembler CEGAR oracle",
+    )
+    mp.add_argument(
+        "--trace",
+        default=None,
+        metavar="DIR",
+        help="record an obs trace of the compile into DIR "
+             "(inspect with: repro trace report DIR)",
     )
     mp.set_defaults(fn=_cmd_map)
 
@@ -420,6 +436,11 @@ def main(argv: Optional[List[str]] = None) -> int:
         "fuzz",
         add_help=False,
         help="batched differential fuzzing fleet (forwards to repro.fuzz)",
+    )
+    sub.add_parser(
+        "trace",
+        add_help=False,
+        help="trace analysis: report, export --chrome, check (repro.obs)",
     )
 
     lp = sub.add_parser("list", help="list registered kernels")

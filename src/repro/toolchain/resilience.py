@@ -211,6 +211,24 @@ def _run_map_payload(payload: Dict[str, Any],
     requests pickle whole graphs).  ``cancel`` (the slot's cancel event)
     is accepted for runner-signature uniformity; whole-point mappings
     are not raced, so it is never polled here."""
+    from ..obs import trace as obs_trace
+
+    name = payload["kernel"]
+    if not isinstance(name, str):
+        name = getattr(name, "name", "<dfg>")
+    with obs_trace.span("worker.map", parent=payload.get("trace"),
+                        kernel=name,
+                        attempt=payload.get("attempt", 0)) as wsp:
+        out = _run_map_payload_impl(payload, inline=inline, cancel=cancel)
+        if "result" in out:
+            wsp.set(status=out["result"].get("status"))
+        elif "failure" in out:
+            wsp.set(failure=out["failure"].get("kind"))
+    return out
+
+
+def _run_map_payload_impl(payload: Dict[str, Any],
+                          inline: bool = False, cancel=None) -> Dict[str, Any]:
     from ..core.facts import seed_from_jsonable
     from ..core.mapper import MapperConfig
     from .session import Toolchain
@@ -347,6 +365,10 @@ class MapTask:
     #: callable itself never crosses the pickle boundary, only its plain-
     #: JSON return value does.
     facts_provider: Optional[Callable[[], Optional[Dict]]] = None
+    #: obs span shipping context (``Span.ship()`` of the parent-side
+    #: bracketing span): rides the payload so the worker's shard joins
+    #: the parent's trace
+    trace_ctx: Optional[Dict[str, str]] = None
 
     def payload(self) -> Dict[str, Any]:
         p = {"kernel": self.kernel, "grid": self.grid, "cfg": self.cfg,
@@ -355,6 +377,8 @@ class MapTask:
             facts = self.facts_provider()
             if facts:
                 p["facts"] = facts
+        if self.trace_ctx is not None:
+            p["trace"] = self.trace_ctx
         return p
 
     def attempt_id(self) -> Tuple[int, int]:

@@ -32,7 +32,6 @@ from __future__ import annotations
 
 import dataclasses
 import os
-import time
 from typing import Callable, Dict, List, Optional, Sequence, Tuple, Union
 
 from ..archspec import ArchSpec, parse_arch
@@ -47,6 +46,7 @@ from ..core.mapper import (
     mapping_cache_key,
 )
 from ..core.mapping import Mapping
+from ..obs import trace as obs_trace
 from . import chaos
 from .artifacts import CompileResult, Program, StageError, format_error
 from .oracles import assembler_oracle, resolve_oracle
@@ -394,16 +394,39 @@ class Toolchain:
         jobs: Optional[int] = None,
     ) -> CompileResult:
         """source -> map -> assemble -> metrics, never raising: failures
-        come back as a :class:`CompileResult` with ``stage`` set."""
+        come back as a :class:`CompileResult` with ``stage`` set.
+
+        ``CompileResult.timings`` is a projection of the stage trace
+        spans (:mod:`repro.obs.trace`): each stage runs inside a
+        ``stage.*`` span whose duration is what lands in ``timings`` —
+        with tracing disabled the spans degrade to plain timers, so the
+        dict is populated either way and result bytes never change."""
         rows, cols = self.grid.spec.rows, self.grid.spec.cols
-        timings: Dict[str, float] = {}
         if isinstance(source, str):
             kernel = source
         else:
             kernel = getattr(source, "name", type(source).__name__)
-        t0 = time.monotonic()
+        with obs_trace.span("compile", kernel=kernel,
+                            grid=f"{rows}x{cols}", arch=self.arch) as csp:
+            cr = self._compile_staged(source, kernel, ii_start, config, jobs)
+            csp.set(status=cr.status, stage=cr.stage,
+                    cache_hit=cr.cache_hit, ii=cr.ii)
+        return cr
+
+    def _compile_staged(
+        self,
+        source,
+        kernel: str,
+        ii_start: Optional[int],
+        config: Optional[MapperConfig],
+        jobs: Optional[int],
+    ) -> CompileResult:
+        rows, cols = self.grid.spec.rows, self.grid.spec.cols
+        timings: Dict[str, float] = {}
+        ssp = obs_trace.timed_span("stage.source", kernel=kernel)
         try:
-            prog = self.program(source)
+            with ssp:
+                prog = self.program(source)
         except StageError as e:
             return CompileResult(
                 kernel=kernel,
@@ -413,9 +436,9 @@ class Toolchain:
                 arch=self.arch,
                 stage=e.stage,
                 error=e.error_text(),
-                timings={"source": time.monotonic() - t0},
+                timings={"source": ssp.dur},
             )
-        timings["source"] = time.monotonic() - t0
+        timings["source"] = ssp.dur
         cr = CompileResult(
             kernel=prog.name,
             rows=rows,
@@ -426,15 +449,17 @@ class Toolchain:
             timings=timings,
         )
 
-        t0 = time.monotonic()
+        msp = obs_trace.timed_span("stage.map", kernel=prog.name)
         try:
-            res, hit = self._map_cached(prog, ii_start=ii_start,
-                                        config=config, jobs=jobs)
+            with msp:
+                res, hit = self._map_cached(prog, ii_start=ii_start,
+                                            config=config, jobs=jobs)
+                msp.set(cache_hit=hit, status=res.status)
         except Exception as e:
-            timings["map"] = time.monotonic() - t0
+            timings["map"] = msp.dur
             cr.stage, cr.error = "map", format_error(e)
             return cr
-        timings["map"] = time.monotonic() - t0
+        timings["map"] = msp.dur
         cr.map_result, cr.cache_hit = res, hit
         if res.mapping is None:
             cr.status, cr.stage = res.status, "map"
@@ -446,24 +471,26 @@ class Toolchain:
         """Run the post-map stages on an already-mapped result (also used
         by ``compile_many`` for cache hits and pool returns)."""
         prog, mapping = cr.program, cr.mapping
-        t0 = time.monotonic()
+        asp = obs_trace.timed_span("stage.assemble", kernel=cr.kernel)
         try:
-            cr.asm = self.assemble(prog, mapping)
+            with asp:
+                cr.asm = self.assemble(prog, mapping)
         except StageError as e:
-            cr.timings["assemble"] = time.monotonic() - t0
+            cr.timings["assemble"] = asp.dur
             cr.status, cr.stage = "error", e.stage
             cr.error = e.error_text()
             return cr
-        cr.timings["assemble"] = time.monotonic() - t0
-        t0 = time.monotonic()
+        cr.timings["assemble"] = asp.dur
+        msp = obs_trace.timed_span("stage.metrics", kernel=cr.kernel)
         try:
-            cr.metrics = self.metrics(prog, mapping, cr.asm)
+            with msp:
+                cr.metrics = self.metrics(prog, mapping, cr.asm)
         except StageError as e:
-            cr.timings["metrics"] = time.monotonic() - t0
+            cr.timings["metrics"] = msp.dur
             cr.status, cr.stage = "error", e.stage
             cr.error = e.error_text()
             return cr
-        cr.timings["metrics"] = time.monotonic() - t0
+        cr.timings["metrics"] = msp.dur
         cr.status, cr.stage, cr.error = "ok", None, None
         return cr
 
@@ -503,6 +530,29 @@ class Toolchain:
         :class:`CompileResult` carries either a verdict or a typed
         ``failure``.
         """
+        # one "fleet" span roots the whole batch, so every fleet.point
+        # bracket and every parent-side post-map stage lands in a single
+        # trace tree (repro trace report shows one root per batch)
+        with obs_trace.span("fleet", kernels=len(kernels),
+                            jobs=jobs) as fsp:
+            out = self._compile_many(kernels, grids, jobs, config,
+                                     points=points, on_result=on_result,
+                                     resilience=resilience)
+            fsp.set(points=len(out),
+                    cache_hits=sum(1 for c in out if c.cache_hit))
+        return out
+
+    def _compile_many(
+        self,
+        kernels: Sequence[str],
+        grids: Optional[Sequence[ArchLike]] = None,
+        jobs: Optional[int] = None,
+        config: Optional[MapperConfig] = None,
+        *,
+        points: Optional[Sequence[PointKey]] = None,
+        on_result: Optional[Callable[[PointKey, CompileResult], None]] = None,
+        resilience: Optional[ResilienceConfig] = None,
+    ) -> List[CompileResult]:
         cfg = config or self.config
         if grids is None:
             grids = [self.grid]
@@ -564,6 +614,7 @@ class Toolchain:
                 # factory must be picklable (module-level) for jobs > 1
                 oracle = (self.oracle_tag, self._oracle_factory)
             tasks = []
+            point_spans: Dict[PointKey, object] = {}
             for pt in pending:
                 provider = None
                 if self.facts is not None:
@@ -579,14 +630,30 @@ class Toolchain:
                         return seed_to_jsonable(
                             self.facts.lift(prog.dfg, tc.grid, extra))
 
+                trace_ctx = None
+                if obs_trace.enabled():
+                    # fleet.point brackets the task from submit to settle
+                    # (queue wait included); the worker's span hangs off
+                    # it via the shipped context
+                    psp = obs_trace.begin(
+                        "fleet.point", kernel=pt[0],
+                        grid=f"{grid_list[pt[1]].spec.rows}"
+                             f"x{grid_list[pt[1]].spec.cols}")
+                    point_spans[pt] = psp
+                    trace_ctx = psp.ship()
                 tasks.append(MapTask(key=pt, kernel=pt[0],
                                      grid=grid_list[pt[1]],
                                      cfg=dict(cfg_dict), oracle=oracle,
-                                     facts_provider=provider))
+                                     facts_provider=provider,
+                                     trace_ctx=trace_ctx))
 
             def handle(pt: PointKey, outcome: Dict) -> None:
                 cr = self._result_from_outcome(
                     pt, outcome, sessions, programs, keys, corrupt_notes)
+                psp = point_spans.pop(pt, None)
+                if psp is not None:
+                    psp.finish(status=cr.status, retries=cr.retries,
+                               degraded=cr.degraded)
                 done[pt] = cr
                 if on_result is not None:
                     on_result(pt, cr)
@@ -598,6 +665,8 @@ class Toolchain:
             else:
                 run_supervised(tasks, jobs=n, rcfg=resilience,
                                on_outcome=handle)
+            for psp in point_spans.values():
+                psp.finish(status="unsettled")  # defensive: never happens
         return [done[pt] for pt in points]
 
     def _publish_facts(self, tc: "Toolchain", prog: Program, res) -> None:

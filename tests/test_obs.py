@@ -1,0 +1,393 @@
+"""Observability subsystem: trace spans, merged multi-process traces,
+attribution, Chrome export, metrics registry, solver deep telemetry and
+the cumulative solver-stats fix.
+
+Everything runs on the dependency-free CDCL backend over 2x2 grids so
+the module stays inside tier-1 time budgets. The module-scoped fixture
+guarantees tracing is switched off again even when a test fails, so the
+global trace state never leaks into other test modules.
+"""
+import glob
+import json
+import os
+import time
+
+import pytest
+
+from repro.core import MapperConfig
+from repro.obs import MetricsRegistry, trace
+from repro.obs.cli import main as trace_cli
+from repro.obs.metrics import Histogram
+from repro.obs.report import (
+    attribution,
+    load,
+    render_report,
+    to_chrome,
+    validate,
+)
+from repro.sat import CDCLSolver, CNF
+from repro.sat.cdcl import Stats
+from repro.toolchain import Toolchain
+
+CDCL = MapperConfig(backend="cdcl", per_ii_timeout_s=10.0,
+                    total_timeout_s=30.0)
+
+
+@pytest.fixture(autouse=True)
+def _trace_state_isolated():
+    """Every test starts and ends with tracing off."""
+    trace.disable()
+    yield
+    trace.disable()
+
+
+def _shards(d):
+    return sorted(glob.glob(os.path.join(str(d), "shard-*.jsonl")))
+
+
+# ---------------------------------------------------------------------------
+# span core: schema round-trip, disabled path, error capture
+# ---------------------------------------------------------------------------
+
+
+def test_schema_round_trip(tmp_path):
+    trace.enable(str(tmp_path))
+    with trace.span("outer", kernel="k", n=3) as outer:
+        outer.event("hello", flag=True, x=1.5)
+        with trace.span("inner") as inner:
+            inner.set(status="ok")
+    trace.disable()
+
+    recs = load(str(tmp_path))
+    assert validate(recs) == []
+    spans = {r["name"]: r for r in recs if r["k"] == "span"}
+    events = [r for r in recs if r["k"] == "event"]
+    assert set(spans) == {"outer", "inner"}
+    out, inn = spans["outer"], spans["inner"]
+    # tree structure and id propagation
+    assert out["parent"] is None
+    assert inn["parent"] == out["span"]
+    assert inn["trace"] == out["trace"]
+    # typed attributes survive the JSONL round-trip
+    assert out["attrs"] == {"kernel": "k", "n": 3}
+    assert inn["attrs"] == {"status": "ok"}
+    assert events == [e for e in events if e["span"] == out["span"]]
+    assert events[0]["attrs"] == {"flag": True, "x": 1.5}
+    for r in recs:
+        assert r["v"] == trace.SCHEMA_VERSION
+        assert r["pid"] == os.getpid()
+
+
+def test_disabled_path_writes_nothing(tmp_path):
+    # enable then disable: later spans must not touch the old directory
+    trace.enable(str(tmp_path))
+    trace.disable()
+    assert not trace.enabled() and trace.trace_dir() is None
+    s1 = trace.span("a", x=1)
+    s2 = trace.span("b")
+    # the no-op path is one shared singleton — zero allocation, zero I/O
+    assert s1 is s2 is trace.NULL_SPAN
+    with s1 as sp:
+        sp.set(y=2).event("never")
+        trace.event("never-either")
+    assert trace.shipping_context() is None
+    assert trace.current() is None
+    assert _shards(tmp_path) == []
+
+
+def test_timed_span_measures_duration_when_disabled():
+    with trace.timed_span("stage.x") as t:
+        time.sleep(0.01)
+    assert t.dur >= 0.005
+    # and it never became the current span nor wrote anything
+    assert trace.current() is None
+
+
+def test_span_records_error_attribute(tmp_path):
+    trace.enable(str(tmp_path))
+    with pytest.raises(ValueError):
+        with trace.span("boom"):
+            raise ValueError("nope")
+    trace.disable()
+    recs = load(str(tmp_path))
+    assert validate(recs) == []
+    (rec,) = [r for r in recs if r["k"] == "span"]
+    assert rec["attrs"]["error"] == "ValueError"
+
+
+def test_shipped_parent_pins_ids_and_reenables(tmp_path):
+    trace.enable(str(tmp_path))
+    with trace.span("parent") as parent:
+        ctx = parent.ship()
+    trace.disable()
+    # a "worker" with tracing off receives the shipped context
+    with trace.span("child", parent=ctx) as child:
+        assert child.trace_id == ctx["trace"]
+        assert child.parent_id == ctx["span"]
+    trace.disable()
+    recs = load(str(tmp_path))
+    assert validate(recs) == []
+    spans = {r["name"]: r for r in recs if r["k"] == "span"}
+    assert spans["child"]["parent"] == spans["parent"]["span"]
+
+
+def test_validate_flags_malformed_traces():
+    dangling = [{"v": 1, "k": "span", "trace": "t", "span": "a",
+                 "parent": "missing", "name": "x", "pid": 1, "tid": 1,
+                 "ts": 0.0, "dur": 0.1, "attrs": {}}]
+    assert any("parent" in p for p in validate(dangling))
+    assert any("unknown schema" in p
+               for p in validate([{"v": 99, "k": "span"}]))
+    assert any("unknown kind" in p
+               for p in validate([{"v": 1, "k": "wat"}]))
+
+
+# ---------------------------------------------------------------------------
+# toolchain integration: timings projection, attribution, fleet merge
+# ---------------------------------------------------------------------------
+
+
+def test_timings_projection_survives_tracing_off():
+    cr = Toolchain("2x2", CDCL).compile("bitcount")
+    assert cr.status == "ok"
+    assert set(cr.timings) == {"source", "map", "assemble", "metrics"}
+    assert all(v >= 0.0 for v in cr.timings.values())
+    assert cr.timings["map"] > 0.0
+
+
+def test_traced_compile_attributes_95_percent(tmp_path):
+    trace.enable(str(tmp_path))
+    cr = Toolchain("2x2", CDCL).compile("gsm")  # CEGAR-active point
+    trace.disable()
+    assert cr.status == "ok"
+    recs = load(str(tmp_path))
+    assert validate(recs) == []
+    att = attribution(recs)
+    names = {r["name"] for r in recs if r["k"] == "span"}
+    assert {"compile", "stage.map", "mapper.ladder", "mapper.attempt_ii",
+            "mapper.encode", "solver.solve", "mapper.oracle"} <= names
+    # the acceptance bar: >= 95% of compile wall time in named spans
+    assert att["attributed"] >= 0.95
+    # traced timings must still project into CompileResult
+    assert set(cr.timings) == {"source", "map", "assemble", "metrics"}
+    # report renders and gates
+    text = render_report(recs, min_attribution=0.95)
+    assert "PASS" in text and "compile" in text
+
+
+def test_traced_portfolio_compile_attributes_95_percent(tmp_path):
+    trace.enable(str(tmp_path))
+    cfg = MapperConfig(strategy="portfolio:cdcl-seq+cdcl-pair",
+                       per_ii_timeout_s=15.0, total_timeout_s=60.0)
+    cr = Toolchain("2x2", cfg).compile("gsm")
+    trace.disable()
+    assert cr.status == "ok"
+    recs = load(str(tmp_path))
+    assert validate(recs) == []
+    att = attribution(recs)
+    names = {r["name"] for r in recs if r["k"] == "span"}
+    assert "portfolio.race" in names and "mapper.attempt_ii" in names
+    assert att["attributed"] >= 0.95
+
+
+def test_solver_progress_events_reach_the_span(tmp_path, monkeypatch):
+    orig = CDCLSolver.__init__
+
+    def eager(self, *a, **k):
+        orig(self, *a, **k)
+        self.progress_every = 1  # sample on every conflict
+
+    monkeypatch.setattr(CDCLSolver, "__init__", eager)
+    trace.enable(str(tmp_path))
+    cr = Toolchain("2x2", CDCL).compile("gsm")
+    trace.disable()
+    assert cr.status == "ok"
+    recs = load(str(tmp_path))
+    samples = [r for r in recs if r.get("k") == "event"
+               and r["name"] == "solver.progress"]
+    assert samples, "expected periodic solver.progress events"
+    counts = [s["attrs"]["conflicts"] for s in samples]
+    assert counts == sorted(counts) and counts[0] >= 1
+    for s in samples:
+        assert {"conflicts", "decisions", "propagations", "restarts",
+                "learned"} <= set(s["attrs"])
+    # every sample's owner is a recorded solver.solve span
+    solve_ids = {r["span"] for r in recs
+                 if r.get("k") == "span" and r["name"] == "solver.solve"}
+    assert all(s["span"] in solve_ids for s in samples)
+
+
+def test_fleet_merge_spans_processes(tmp_path):
+    trace.enable(str(tmp_path))
+    tc = Toolchain("4x4", MapperConfig(backend="cdcl", per_ii_timeout_s=15,
+                                       total_timeout_s=60, ii_max=32))
+    crs = tc.compile_many(["dotprod", "bitcount"], jobs=2)
+    trace.disable()
+    assert [c.status for c in crs] == ["ok", "ok"]
+    recs = load(str(tmp_path))
+    assert validate(recs) == []  # every cross-process parent resolves
+    assert len(_shards(tmp_path)) >= 2  # workers wrote their own shards
+    pids = {r["pid"] for r in recs}
+    assert len(pids) >= 2
+    spans = [r for r in recs if r["k"] == "span"]
+    by_id = {r["span"]: r for r in spans}
+    points = [r for r in spans if r["name"] == "fleet.point"]
+    workers = [r for r in spans if r["name"] == "worker.map"]
+    assert len(points) == 2 and len(workers) == 2
+    for w in workers:
+        assert by_id[w["parent"]]["name"] == "fleet.point"
+        assert w["pid"] != by_id[w["parent"]]["pid"]
+    # one trace, rooted at the batch-level fleet span, covers the fan-out
+    assert len({r["trace"] for r in spans}) == 1
+    roots = [r for r in spans if r["parent"] is None]
+    assert [r["name"] for r in roots] == ["fleet"]
+    for p in points:
+        assert by_id[p["parent"]]["name"] == "fleet"
+
+
+# ---------------------------------------------------------------------------
+# analysis layer: attribution math, Chrome export, CLI
+# ---------------------------------------------------------------------------
+
+
+def _mk_span(sid, parent, name, ts, dur, trace_id="t"):
+    return {"v": 1, "k": "span", "trace": trace_id, "span": sid,
+            "parent": parent, "name": name, "pid": 1, "tid": 1,
+            "ts": ts, "dur": dur, "attrs": {}}
+
+
+def test_attribution_math_on_synthetic_tree():
+    recs = [
+        _mk_span("r", None, "root", 0.0, 10.0),
+        _mk_span("a", "r", "child", 0.0, 4.0),
+        _mk_span("b", "r", "child", 3.0, 5.0),  # overlaps a: union = 8
+    ]
+    att = attribution(recs)
+    (root,) = att["roots"]
+    assert root["attributed"] == pytest.approx(0.8)
+    assert att["attributed"] == pytest.approx(0.8)
+    assert att["by_name"]["root"]["self_s"] == pytest.approx(2.0)
+    assert att["by_name"]["child"]["total_s"] == pytest.approx(9.0)
+
+
+def test_chrome_export_structure(tmp_path):
+    trace.enable(str(tmp_path))
+    with trace.span("outer") as sp:
+        sp.event("tick")
+        with trace.span("inner"):
+            pass
+    trace.disable()
+    recs = load(str(tmp_path))
+    doc = to_chrome(recs)
+    phases = sorted(e["ph"] for e in doc["traceEvents"])
+    assert phases == ["X", "X", "i"]
+    assert all(e["ts"] >= 0.0 for e in doc["traceEvents"])
+    assert doc["displayTimeUnit"] == "ms"
+    # spans carry their ids so the viewer can cross-reference
+    xs = [e for e in doc["traceEvents"] if e["ph"] == "X"]
+    assert all("span" in e["args"] and "trace" in e["args"] for e in xs)
+
+
+def test_trace_cli_report_check_export(tmp_path, capsys):
+    trace.enable(str(tmp_path / "tr"))
+    with trace.span("compile", kernel="k"):
+        with trace.span("stage.map"):
+            time.sleep(0.002)
+    trace.disable()
+    assert trace_cli(["report", str(tmp_path / "tr")]) == 0
+    assert "aggregate attribution" in capsys.readouterr().out
+    assert trace_cli(["check", str(tmp_path / "tr"),
+                      "--min-attribution", "0.0"]) == 0
+    out = str(tmp_path / "chrome.json")
+    assert trace_cli(["export", str(tmp_path / "tr"),
+                      "--chrome", "-o", out]) == 0
+    doc = json.load(open(out))
+    assert len(doc["traceEvents"]) == 2
+    # an empty/nonexistent trace is an error, not a crash
+    assert trace_cli(["report", str(tmp_path / "nope")]) == 1
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+def test_metrics_counters_and_histograms():
+    m = MetricsRegistry()
+    m.inc("hits")
+    m.inc("hits", 4)
+    for v in range(1, 101):
+        m.observe("lat_s", float(v))
+    snap = m.snapshot()
+    assert snap["counters"]["hits"] == 5
+    h = snap["histograms"]["lat_s"]
+    assert h["count"] == 100 and h["min"] == 1.0 and h["max"] == 100.0
+    assert h["p50"] == 50.0 and h["p90"] == 90.0 and h["p99"] == 99.0
+    assert h["sum"] == pytest.approx(5050.0)
+
+
+def test_histogram_reservoir_keeps_exact_aggregates():
+    h = Histogram("lat_s", window=8)
+    for v in range(1, 1001):
+        h.observe(float(v))
+    snap = h.snapshot()
+    # count/sum/min/max are exact even though the reservoir is tiny
+    assert snap["count"] == 1000 and snap["max"] == 1000.0
+    assert snap["min"] == 1.0 and snap["sum"] == pytest.approx(500500.0)
+    # percentiles come from the sliding window of recent samples
+    assert 992.0 <= snap["p50"] <= 1000.0
+
+
+def test_empty_histogram_snapshot():
+    h = Histogram("empty")
+    snap = h.snapshot()
+    assert snap == {"count": 0}
+    assert h.percentile(0.5) is None
+
+
+# ---------------------------------------------------------------------------
+# satellite: cumulative CDCL solver stats
+# ---------------------------------------------------------------------------
+
+
+def _pigeonhole(holes):
+    cnf = CNF()
+    n = holes + 1
+    var = {(p, h): cnf.new_var() for p in range(n) for h in range(holes)}
+    for p in range(n):
+        cnf.add_clause([var[(p, h)] for h in range(holes)])
+    for h in range(holes):
+        for p1 in range(n):
+            for p2 in range(p1 + 1, n):
+                cnf.add_clause((-var[(p1, h)], -var[(p2, h)]))
+    return cnf
+
+
+def test_solver_time_s_accumulates_across_solves():
+    cnf = _pigeonhole(4)
+    del cnf.clauses[0]  # SAT variant so solve() can be repeated
+    s = CDCLSolver(cnf)
+    assert s.solve(timeout_s=30) == "sat"
+    t1, last1 = s.stats.time_s, s.stats.last_solve_s
+    assert t1 > 0.0 and t1 == pytest.approx(last1)
+    assert s.solve(timeout_s=30) == "sat"
+    # cumulative total strictly grows; last_solve_s is per-call
+    assert s.stats.time_s > t1
+    assert s.stats.last_solve_s < s.stats.time_s
+    assert s.stats.time_s == pytest.approx(last1 + s.stats.last_solve_s)
+
+
+def test_stats_defaults_include_last_solve():
+    st = Stats()
+    assert st.time_s == 0.0 and st.last_solve_s == 0.0
+
+
+def test_progress_callback_fires_per_conflict():
+    s = CDCLSolver(_pigeonhole(4))
+    s.progress_every = 1
+    seen = []
+    s.on_progress = lambda st: seen.append(st.conflicts)
+    assert s.solve(timeout_s=30) == "unsat"
+    assert s.stats.conflicts > 0
+    assert len(seen) == s.stats.conflicts
+    assert seen == sorted(seen)

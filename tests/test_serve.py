@@ -177,6 +177,50 @@ def test_serve_stats_snapshot():
         "rejected": 0, "errors": 0}
 
 
+def test_stats_schema_bump_is_additive_over_v1_golden():
+    """STATS_SCHEMA 2 only *adds* fields: every key of the golden v1
+    ``stats`` body survives, same name and same JSON type, so clients
+    written against v1 keep parsing new servers unchanged."""
+    with open(os.path.join(FIXTURES, "wire_stats_v1.json")) as fh:
+        golden = json.load(fh)
+    golden.pop("_comment")
+
+    async def body(server, client):
+        cr, served = await client.compile("bitcount")
+        assert served == "compiled"
+        return await client.stats()
+
+    stats = asyncio.run(_with_server(body))
+
+    def check_additive(g, s, path="stats"):
+        for key, val in g.items():
+            assert key in s, f"{path}.{key} dropped from stats response"
+            assert type(s[key]) is type(val), \
+                f"{path}.{key} changed type {type(val).__name__} -> " \
+                f"{type(s[key]).__name__}"
+            if isinstance(val, dict):
+                check_additive(val, s[key], f"{path}.{key}")
+
+    check_additive(golden, stats)
+    # a v1 client's exact read patterns still work on the live response
+    assert stats["v"] == 1
+    assert stats["serving"]["compiled"] == 1
+    assert stats["mapper_invocations"] == 1
+    # the bump is advertised; new telemetry lives under *new* keys only
+    assert stats["stats_schema"] >= CompileServer.STATS_SCHEMA
+    assert set(stats["metrics"]) == {"counters", "histograms"}
+    assert stats["queue"] == {"pool_pending": 0, "inflight_keys": 0}
+    assert stats["metrics"]["counters"]["serve.served.compiled"] == 1
+    lat = stats["metrics"]["histograms"]["serve.request_s"]
+    assert lat["count"] == 1 and {"p50", "p90", "p99"} <= set(lat)
+    # per-stage latency histograms cover the served pipeline stages
+    # (the server parses sources itself, so no "source" stage here)
+    stages = {k for k in stats["metrics"]["histograms"]
+              if k.startswith("serve.stage.")}
+    assert {"serve.stage.map_s", "serve.stage.assemble_s",
+            "serve.stage.metrics_s"} <= stages
+
+
 # ---------------------------------------------------------------------------
 # the server end to end (in-process TCP)
 # ---------------------------------------------------------------------------
